@@ -1,0 +1,31 @@
+"""Paper §V.D: node allocation patterns per scheme x competition level.
+
+Energy-centric should concentrate on frugal class-A nodes; performance-
+centric on high-capacity class C; default K8s spreads (LeastRequested).
+"""
+from __future__ import annotations
+
+from repro.cluster.simulator import run_experiment
+
+SCHEMES = ("general", "energy_centric", "performance_centric",
+           "resource_efficient")
+CLASSES = ("A", "B", "C", "default")
+
+
+def run(csv: bool = True):
+    print("level,scheme,scheduler," + ",".join(CLASSES))
+    out = {}
+    for level in ("low", "medium", "high"):
+        for scheme in SCHEMES:
+            res = run_experiment(level, scheme)
+            for sched in ("topsis", "default"):
+                alloc = res.allocation(sched)
+                row = [alloc.get(c, 0) for c in CLASSES]
+                print(f"{level},{scheme},{sched}," +
+                      ",".join(map(str, row)))
+                out[(level, scheme, sched)] = row
+    return out
+
+
+if __name__ == "__main__":
+    run()

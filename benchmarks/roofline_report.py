@@ -1,0 +1,59 @@
+"""Render the EXPERIMENTS.md §Roofline table from launch/dryrun.py output.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline_report [dir] [--mesh single]
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+               "long_500k": 3}
+
+
+def load(dryrun_dir: str, mesh: str):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dryrun_dir, f"*__{mesh}.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    recs.sort(key=lambda r: (r["arch"], SHAPE_ORDER.get(r["shape"], 9)))
+    return recs
+
+
+def fmt(recs, md=True):
+    lines = []
+    hdr = ("| arch | shape | mesh | compute_s | memory_s | collective_s | "
+           "dominant | HBM GB/dev | MODEL_FLOPS/HLO | ok |")
+    lines.append(hdr)
+    lines.append("|" + "---|" * 10)
+    for r in recs:
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | - | -"
+                         f" | - | - | - | - | FAIL: {r.get('error','')[:40]} |")
+            continue
+        rf = r["roofline"]
+        peak = r["memory"]["peak_bytes"] / 1e9
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {rf['compute_s']:.3e} | {rf['memory_s']:.3e} "
+            f"| {rf['collective_s']:.3e} | {rf['dominant'].replace('_s','')} "
+            f"| {peak:.2f} | {r['useful_flops_frac']:.2f} | ok |")
+    return "\n".join(lines)
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    meshes = ["single", "multi"]
+    if "--mesh" in sys.argv:
+        meshes = [sys.argv[sys.argv.index("--mesh") + 1]]
+    for mesh in meshes:
+        recs = load(d, mesh)
+        print(f"\n### Roofline — {mesh}-pod mesh "
+              f"({'256' if mesh == 'single' else '512'} chips)\n")
+        print(fmt(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Benchmark entry point: one module per paper table/figure + the roofline
+report (assignment §Roofline, from the dry-run artifacts if present).
+
+Usage: PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import os
+import time
+
+
+def main() -> None:
+    t0 = time.time()
+    print("=" * 72)
+    print("Table VI — energy by profile x competition (paper headline)")
+    print("=" * 72)
+    from benchmarks import table6_energy
+    table6_energy.run()
+
+    print()
+    print("=" * 72)
+    print("Fig 2 analogue — node allocation patterns (paper §V.D)")
+    print("=" * 72)
+    from benchmarks import node_allocation
+    node_allocation.run()
+
+    print()
+    print("=" * 72)
+    print("Scheduling time (paper §IV.C) — decision latency vs fleet size")
+    print("=" * 72)
+    from benchmarks import scheduling_time
+    scheduling_time.run()
+
+    print()
+    print("=" * 72)
+    print("Table VII — real-world impact extrapolation (paper §V.E-F)")
+    print("=" * 72)
+    from benchmarks import table7_impact
+    table7_impact.run()
+
+    if os.path.isdir("experiments/dryrun"):
+        print()
+        print("=" * 72)
+        print("Roofline (assignment) — from dry-run artifacts")
+        print("=" * 72)
+        from benchmarks import roofline_report
+        recs = roofline_report.load("experiments/dryrun", "single")
+        if recs:
+            print(roofline_report.fmt(recs))
+
+    print(f"\n# benchmarks completed in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

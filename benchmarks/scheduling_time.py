@@ -1,0 +1,60 @@
+"""Paper §IV.C 'Scheduling Time (ms)': TOPSIS decision latency.
+
+The paper's cluster has 4 nodes; a production fleet has thousands. We sweep
+N = 4 .. 4096 candidate nodes and time three backends:
+
+  numpy    — the per-pod hot path used by the cluster scheduler
+  jax-jit  — the jittable engine (fleet batch scoring on accelerators)
+  kernel   — the Pallas TOPSIS kernel (interpret mode on CPU; compiles to
+             Mosaic on a real TPU)
+
+Also times the DEFAULT K8s scheduler's python scoring for reference.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import topsis
+from repro.core.criteria import benefit_mask
+from repro.kernels import ops
+
+
+def _time(f, *args, reps=30, warmup=3):
+    for _ in range(warmup):
+        f(*args)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        f(*args)
+    return (time.perf_counter() - t0) / reps
+
+
+def run(csv: bool = True):
+    rng = np.random.default_rng(0)
+    benefit = benefit_mask()
+    w = np.full(5, 0.2)
+    print("backend,n_nodes,us_per_decision")
+    results = {}
+    for n in (4, 16, 64, 256, 1024, 4096):
+        M = rng.uniform(0.1, 10.0, (n, 5))
+        t_np = _time(lambda: topsis.closeness_np(M, w, benefit))
+        Mj = jax.numpy.asarray(M)
+        wj = jax.numpy.asarray(w)
+        bj = jax.numpy.asarray(benefit)
+        vj = jax.numpy.ones((n,), bool)
+        jf = jax.jit(lambda M, w, b, v:
+                     topsis.closeness(M, w, b, v).closeness)
+        t_jit = _time(lambda: jf(Mj, wj, bj, vj).block_until_ready())
+        kf = jax.jit(lambda M, w, b: ops.topsis_closeness(M, w, b))
+        t_k = _time(lambda: kf(Mj, wj, bj).block_until_ready(), reps=10)
+        for name, t in (("numpy", t_np), ("jax-jit", t_jit),
+                        ("pallas-interpret", t_k)):
+            print(f"{name},{n},{t * 1e6:.1f}")
+            results[(name, n)] = t * 1e6
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Beyond-paper: GreenPod TOPSIS as the placement engine for a TPU fleet.
+
+Loads the compiled dry-run roofline records (launch/dryrun.py output) as
+schedulable JOBS and places them on a heterogeneous fleet of slices with the
+paper's weighting schemes. Shows the energy-centric vs performance-centric
+allocation difference — the TPU analogue of paper §V.D — and straggler
+re-placement.
+
+Run: PYTHONPATH=src python examples/fleet_scheduler.py [dryrun_dir]
+"""
+import sys
+
+from repro.launch import fleet
+
+dryrun_dir = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+jobs = fleet.load_jobs(dryrun_dir)
+if not jobs:
+    # standalone demo jobs if no dry-run artifacts exist yet
+    jobs = [fleet.Job("llama3-8b", "train_4k", 256, 1.5, 12.0, 8.0, 8e9),
+            fleet.Job("gemma-7b", "prefill_32k", 256, 0.6, 3.5, 1.7, 8e9),
+            fleet.Job("rwkv6-1.6b", "decode_32k", 256, 1e-5, 1e-3, 4e-4,
+                      1e9)]
+print(f"{len(jobs)} jobs loaded from {dryrun_dir}")
+
+
+def new_fleet():
+    return [fleet.Slice("v5e-0", 256, 256, "v5e"),
+            fleet.Slice("v5e-1", 256, 256, "v5e"),
+            fleet.Slice("v4-0", 256, 256, "v4"),
+            fleet.Slice("v5p-0", 256, 256, "v5p"),
+            fleet.Slice("v5p-1", 512, 512, "v5p")]
+
+
+for scheme in ("energy_centric", "performance_centric"):
+    slices = new_fleet()
+    placed = fleet.schedule_queue(jobs[:5], slices, scheme)
+    print(f"\n--- scheme: {scheme}")
+    for job, idx in placed:
+        where = slices[idx].name if idx is not None else "UNSCHEDULABLE"
+        step, energy = (fleet.job_on_slice(job, slices[idx])
+                        if idx is not None else (float('nan'), float('nan')))
+        print(f"  {job.arch:22s} {job.shape:12s} -> {where:8s} "
+              f"step={step:9.3e}s energy={energy / 1e3:9.2f} kJ")
+
+# --- straggler mitigation -------------------------------------------------------
+slices = new_fleet()
+job = jobs[0]
+cur, _ = fleet.place(job, slices, "energy_centric")
+print(f"\njob {job.arch}/{job.shape} initially on {slices[cur].name}")
+new = fleet.replace_slice(job, slices, cur, "energy_centric")
+print(f"straggler alert -> degraded {slices[cur].name} (health "
+      f"{slices[cur].health:.1f}x), re-placed on {slices[new].name}")

@@ -1,0 +1,41 @@
+"""End-to-end serving driver: batched requests through the wave engine
+(prefill + KV-cache decode) on a reduced model, with per-wave stats.
+
+Run: PYTHONPATH=src python examples/serve_lm.py [--requests 12]
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.models import lm
+from repro.serve.engine import Engine, Request
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="llama3-8b")
+ap.add_argument("--requests", type=int, default=12)
+ap.add_argument("--slots", type=int, default=4)
+ap.add_argument("--max-new", type=int, default=16)
+args = ap.parse_args()
+
+cfg = registry.smoke_config(args.arch)
+model = lm.build(cfg)
+params = model.init(jax.random.PRNGKey(0))
+eng = Engine(model, params, batch_slots=args.slots, max_len=64)
+
+rng = np.random.default_rng(0)
+reqs = [Request(i, rng.integers(2, cfg.vocab, rng.integers(4, 12))
+                .astype(np.int32), max_new_tokens=args.max_new)
+        for i in range(args.requests)]
+
+t0 = time.perf_counter()
+results = eng.serve(reqs)
+dt = time.perf_counter() - t0
+n_tok = sum(len(r.tokens) for r in results)
+print(f"served {len(results)} requests in {dt:.2f}s "
+      f"({args.slots} slots/wave): {n_tok} tokens, "
+      f"{n_tok / dt:.1f} tok/s on CPU")
+for r in results[:5]:
+    print(f"  req {r.uid}: {len(r.tokens)} tokens -> {r.tokens[:8]}...")

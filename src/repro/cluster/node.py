@@ -1,0 +1,62 @@
+"""Cluster node model — paper Table I node categories."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.energy import NODE_ENERGY_PROFILES
+
+
+@dataclasses.dataclass
+class Node:
+    name: str
+    node_class: str          # "A" | "B" | "C" | "default"
+    vcpus: float
+    mem_gb: float
+    # system components (kube-system etc.) reserve resources on the default node
+    reserved_cpu: float = 0.0
+    reserved_mem: float = 0.0
+    used_cpu: float = 0.0
+    used_mem: float = 0.0
+
+    @property
+    def speed(self) -> float:
+        return NODE_ENERGY_PROFILES[self.node_class]["speed"]
+
+    @property
+    def free_cpu(self) -> float:
+        return self.vcpus - self.reserved_cpu - self.used_cpu
+
+    @property
+    def free_mem(self) -> float:
+        return self.mem_gb - self.reserved_mem - self.used_mem
+
+    @property
+    def cpu_util(self) -> float:
+        return (self.reserved_cpu + self.used_cpu) / self.vcpus
+
+    @property
+    def mem_util(self) -> float:
+        return (self.reserved_mem + self.used_mem) / self.mem_gb
+
+    def fits(self, cpu: float, mem: float) -> bool:
+        return self.free_cpu >= cpu - 1e-9 and self.free_mem >= mem - 1e-9
+
+    def bind(self, cpu: float, mem: float) -> None:
+        assert self.fits(cpu, mem), f"overcommit on {self.name}"
+        self.used_cpu += cpu
+        self.used_mem += mem
+
+    def release(self, cpu: float, mem: float) -> None:
+        self.used_cpu -= cpu
+        self.used_mem -= mem
+
+
+def make_paper_cluster() -> list[Node]:
+    """Heterogeneous GKE cluster of paper Table I (one node per category)."""
+    return [
+        Node("node-a", "A", vcpus=2, mem_gb=4),                     # e2-medium
+        Node("node-b", "B", vcpus=2, mem_gb=8),                     # n2-standard-2
+        Node("node-c", "C", vcpus=4, mem_gb=16),                    # n2-standard-4
+        Node("node-default", "default", vcpus=2, mem_gb=8,          # e2-standard-2
+             reserved_cpu=0.5, reserved_mem=1.5),                   # system components
+    ]

@@ -1,0 +1,49 @@
+"""Criterion definitions for GreenPod scheduling (paper §I, §III).
+
+The five GreenPod criteria, in canonical column order:
+
+  0 execution_time  (cost)    — predicted task runtime on the candidate node
+  1 energy          (cost)    — predicted task energy on the candidate node
+  2 cores           (benefit) — available processing cores after placement
+  3 memory          (benefit) — available memory after placement
+  4 balance         (benefit) — resource balance (1 - |cpu_util - mem_util|)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Criterion:
+    name: str
+    benefit: bool  # True: higher is better; False: cost criterion
+    description: str = ""
+
+
+GREENPOD_CRITERIA: tuple[Criterion, ...] = (
+    Criterion("execution_time", False, "predicted runtime (s)"),
+    Criterion("energy", False, "predicted energy (J)"),
+    Criterion("cores", True, "free vCPU after placement"),
+    Criterion("memory", True, "free memory (GB) after placement"),
+    Criterion("balance", True, "1 - |cpu_util - mem_util| after placement"),
+)
+
+CRITERIA_NAMES: tuple[str, ...] = tuple(c.name for c in GREENPOD_CRITERIA)
+N_CRITERIA = len(GREENPOD_CRITERIA)
+
+
+def benefit_mask(criteria=GREENPOD_CRITERIA) -> np.ndarray:
+    return np.array([c.benefit for c in criteria], dtype=bool)
+
+
+# Fleet-level criteria (beyond-paper: TOPSIS over TPU slices; values derived
+# from compiled roofline terms — see repro.launch.fleet).
+FLEET_CRITERIA: tuple[Criterion, ...] = (
+    Criterion("step_time", False, "roofline-estimated step time (s)"),
+    Criterion("energy", False, "step_time x slice TDP (J)"),
+    Criterion("chips", True, "free chips on slice"),
+    Criterion("hbm_headroom", True, "free HBM after placement (GB)"),
+    Criterion("balance", True, "1 - |compute_util - hbm_util|"),
+)

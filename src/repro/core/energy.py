@@ -1,0 +1,87 @@
+"""Energy models.
+
+1. ``blade_power`` — the blade-server power model of Dayarathna et al. [32],
+   the exact model the paper uses for its real-world extrapolation (§V.E):
+
+     P = 14.45 + 0.236*u_cpu - 4.47e-8*u_mem + 0.00281*u_disk + 3.1e-8*u_net  [W]
+
+   with u_cpu in percent, u_mem in memory accesses/s, u_disk in IO ops/s,
+   u_net in network ops/s.
+
+2. Per-node-class *dynamic* energy profiles for the cluster simulator
+   (DESIGN.md §7 calibration): each node class has a speed factor and a
+   dynamic power per allocated vCPU. Energy attributed to a task is
+   dynamic power x runtime, matching the paper's 'energy consumption from
+   scheduling decisions' metric (Table IV).
+
+3. ``chip_energy`` — TPU-side model for the beyond-paper fleet scheduler:
+   energy = step_time x chips x (idle + (TDP-idle) x mfu-ish utilization).
+"""
+from __future__ import annotations
+
+
+def blade_power(u_cpu_pct: float, u_mem_acc_per_s: float = 0.0,
+                u_disk_iops: float = 0.0, u_net_ops: float = 0.0) -> float:
+    """Dayarathna et al. [32] blade server power (Watts)."""
+    return (14.45 + 0.236 * u_cpu_pct - 4.47e-8 * u_mem_acc_per_s
+            + 0.00281 * u_disk_iops + 3.1e-8 * u_net_ops)
+
+
+def paper_job_energy_kwh(runtime_min: float = 34.0, pue: float = 1.45,
+                         u_cpu_pct: float = 60.0,
+                         u_mem_acc_per_s: float = 8e6,
+                         u_disk_iops: float = 350.0,
+                         u_net_ops: float = 3e6) -> float:
+    """Average job energy exactly as computed in paper §V.E (≈0.024 kWh)."""
+    p_watts = blade_power(u_cpu_pct, u_mem_acc_per_s, u_disk_iops, u_net_ops)
+    return p_watts * pue * (runtime_min / 60.0) / 1000.0
+
+
+# --- Cluster-simulator node energy profiles (calibrated, DESIGN.md §7) -----
+# speed: relative per-core throughput; dyn_power_per_vcpu: Watts drawn per
+# allocated vCPU while a task runs; idle_power: Watts the node draws whenever
+# a scheduler's pods keep it awake (static/uncore power). Class A (e2-medium)
+# is slow but frugal, class C (n2-standard-4) fast but power-hungry — the
+# heterogeneity axis the paper's §V.D allocation analysis relies on.
+# Consolidating onto one frugal node avoids paying several nodes' idle power,
+# which is the physical mechanism behind the paper's 30-39% energy savings.
+# Values fit to paper Table VI by scripts/calibrate.py (err metric in
+# scripts/calibrated_params.json); see EXPERIMENTS.md §Repro for the match.
+NODE_ENERGY_PROFILES: dict[str, dict[str, float]] = {
+    "A": {"speed": 0.7500, "dyn_power_per_vcpu": 6.0000, "idle_power": 6.2321},
+    "B": {"speed": 1.1000, "dyn_power_per_vcpu": 10.0000, "idle_power": 9.5953},
+    "C": {"speed": 1.3417, "dyn_power_per_vcpu": 27.0570, "idle_power": 14.0000},
+    "default": {"speed": 0.7000, "dyn_power_per_vcpu": 11.7709,
+                "idle_power": 14.9153},
+}
+
+
+def task_energy_joules(node_class: str, runtime_s: float,
+                       cpu_request: float) -> float:
+    """Dynamic (CPU-proportional) energy of one task."""
+    prof = NODE_ENERGY_PROFILES[node_class]
+    return prof["dyn_power_per_vcpu"] * cpu_request * runtime_s
+
+
+def predicted_task_energy_joules(node_class: str, runtime_s: float,
+                                 cpu_request: float, node_awake: bool) -> float:
+    """Energy-profiling-module prediction used in the decision matrix:
+    dynamic energy plus — if the node is currently asleep — the idle power
+    the placement would newly wake up for the task's duration. Marginal idle
+    cost of an already-awake node is zero, which is what makes energy-centric
+    TOPSIS consolidate (paper §V.D)."""
+    e = task_energy_joules(node_class, runtime_s, cpu_request)
+    if not node_awake:
+        e += NODE_ENERGY_PROFILES[node_class]["idle_power"] * runtime_s
+    return e
+
+
+# --- TPU fleet (beyond-paper) ----------------------------------------------
+TPU_V5E_TDP_W = 250.0        # per-chip board power envelope
+TPU_V5E_IDLE_W = 70.0
+
+
+def chip_energy_joules(step_time_s: float, chips: int,
+                       utilization: float) -> float:
+    p = TPU_V5E_IDLE_W + (TPU_V5E_TDP_W - TPU_V5E_IDLE_W) * utilization
+    return step_time_s * chips * p

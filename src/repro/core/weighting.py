@@ -1,0 +1,52 @@
+"""Weighting schemes (paper Table III) + the adaptive weighting module (§III.A).
+
+The paper names four schemes but does not publish the weight vectors; the
+vectors below are our calibration (DESIGN.md §7), ordered as
+``criteria.CRITERIA_NAMES``: (execution_time, energy, cores, memory, balance).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+# Vectors calibrated against paper Table VI (scripts/calibrate.py);
+# normalized at use. Order: (exec_time, energy, cores, memory, balance).
+SCHEMES: dict[str, np.ndarray] = {
+    # Equal importance to all five metrics ("general (balanced)").
+    "general": np.array([0.20, 0.20, 0.20, 0.20, 0.20]),
+    # Prioritize power consumption.
+    "energy_centric": np.array([0.2016, 0.3352, 0.0505, 0.0505, 0.0869]),
+    # Emphasize execution speed.
+    "performance_centric": np.array([0.2250, 0.1696, 0.1732, 0.1732, 0.2158]),
+    # Balance overall resource utilization and energy efficiency.
+    "resource_efficient": np.array([0.1348, 0.3605, 0.1876, 0.1876, 0.2383]),
+}
+
+SCHEME_NAMES = tuple(SCHEMES)
+
+
+def weights_for(scheme: str) -> np.ndarray:
+    try:
+        w = SCHEMES[scheme]
+    except KeyError as e:
+        raise ValueError(f"unknown weighting scheme {scheme!r}; "
+                         f"choose from {sorted(SCHEMES)}") from e
+    return w / w.sum()
+
+
+def adaptive_weights(scheme: str, cluster_utilization: float) -> np.ndarray:
+    """Adaptive weighting module (paper §III.A): 'dynamically adjusts criteria
+    weights based on system conditions'.
+
+    As cluster utilization rises toward saturation, placement quality is
+    increasingly determined by *fit* rather than *preference*: we shift weight
+    from the energy criterion toward cores/memory/balance, mirroring the
+    paper's observation (§V.C) that high competition 'may require hybrid
+    approaches balancing energy awareness with resource efficiency'.
+    """
+    w = weights_for(scheme).copy()
+    u = float(np.clip(cluster_utilization, 0.0, 1.0))
+    # Linear pull of up to 50% of the energy weight once utilization > 0.6.
+    pull = 0.5 * max(0.0, (u - 0.6) / 0.4) * w[1]
+    w[1] -= pull
+    w[2:5] += pull / 3.0
+    return w / w.sum()

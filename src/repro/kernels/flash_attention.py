@@ -1,0 +1,261 @@
+"""Pallas TPU flash attention (forward), GQA + causal + sliding window.
+
+Online-softmax blocked attention: grid (B, H, Sq/bq, Skv/bk); the kv axis is
+the innermost (sequential on TPU) grid dimension, with running max / sum /
+accumulator carried in VMEM scratch across kv steps. Q/K/V blocks are tiled
+into VMEM via BlockSpec; K/V index maps fold the GQA group so kv heads are
+fetched once per group.
+
+MXU alignment: bq, bk default 128/256; head_dim must be a multiple of 128 on
+real hardware for best MXU utilization (gemma's 256 is ideal; 64 works via
+lane padding in the ops wrapper).
+
+Out-of-window / acausal blocks are masked (p := 0) rather than skipped; a
+production variant skips them with a q-dependent kv grid (noted in
+EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_BIG = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref,
+                  l_ref, *, sm_scale: float, causal: bool,
+                  window: int | None, bq: int, bk: int, kv_len: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_BIG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * sm_scale          # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)                     # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)                     # (bk, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq, bk)
+
+    q_idx = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_idx = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_idx < kv_len          # exclude padded keys
+    if causal:
+        mask &= k_idx <= q_idx
+    if window is not None:
+        mask &= k_idx > q_idx - window
+    s = jnp.where(mask, s, NEG_BIG)
+
+    m_prev = m_ref[...][:, :1]                               # (bq, 1)
+    l_prev = l_ref[...][:, :1]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.where(mask, jnp.exp(s - m_cur), 0.0)             # (bq, bk)
+    l_cur = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_cur, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_cur, l_ref.shape)
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = l_ref[...][:, :1]
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+        if lse_ref is not None:
+            m = m_ref[...][:, :1]
+            lse_ref[0, 0] = (m + jnp.log(jnp.maximum(l, 1e-30)))[:, 0]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "sm_scale", "bq", "bk",
+                              "kv_len", "interpret"))
+def flash_attention_blocks(q, k, v, *, sm_scale: float, causal: bool = True,
+                           window: int | None = None, bq: int = 128,
+                           bk: int = 128, kv_len: int | None = None,
+                           interpret: bool = False):
+    """q: (B, H, Sq, D); k, v: (B, Hkv, Skv, D); Sq % bq == Skv % bk == 0,
+    D lane-aligned. ``kv_len``: true (unpadded) number of keys.
+    Returns (out (B, H, Sq, D), lse (B, H, Sq) f32) — lse feeds the
+    backward kernels."""
+    b, h, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert h % hkv == 0 and sq % bq == 0 and skv % bk == 0
+    group = h // hkv
+    grid = (b, h, sq // bq, skv // bk)
+    kernel = functools.partial(_flash_kernel, sm_scale=sm_scale,
+                               causal=causal, window=window, bq=bq, bk=bk,
+                               kv_len=kv_len if kv_len is not None else skv)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h_, iq, ik, g=group: (b_, h_ // g, ik, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h_, iq, ik, g=group: (b_, h_ // g, ik, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+            pl.BlockSpec((1, 1, bq), lambda b_, h_, iq, ik: (b_, h_, iq)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(q.shape, q.dtype),
+            jax.ShapeDtypeStruct((b, h, sq), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),     # acc
+            pltpu.VMEM((bq, 128), jnp.float32),   # running max (lane-bcast)
+            pltpu.VMEM((bq, 128), jnp.float32),   # running sum
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+# --- backward -----------------------------------------------------------------
+def _mask(s, iq, ik, bq, bk, causal, window, kv_len):
+    q_idx = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_idx = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    m = k_idx < kv_len
+    if causal:
+        m &= k_idx <= q_idx
+    if window is not None:
+        m &= k_idx > q_idx - window
+    return m
+
+
+def _flash_bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dd_ref,
+                         dq_ref, dq_acc, *, sm_scale, causal, window,
+                         bq, bk, kv_len):
+    """grid (B, H, Sq/bq, Skv/bk), kv innermost; accumulates dq."""
+    iq, ik = pl.program_id(2), pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        dq_acc[...] = jnp.zeros_like(dq_acc)
+
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    do = do_ref[0, 0].astype(jnp.float32)
+    lse = lse_ref[0, 0][:, None]                               # (bq, 1)
+    dd = dd_ref[0, 0][:, None]                                 # (bq, 1)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+    mask = _mask(s, iq, ik, bq, bk, causal, window, kv_len)
+    p = jnp.where(mask, jnp.exp(s - lse), 0.0)                 # (bq, bk)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - dd) * sm_scale
+    dq_acc[...] += jax.lax.dot_general(ds, k, (((1,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.float32)
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        dq_ref[0, 0] = dq_acc[...].astype(dq_ref.dtype)
+
+
+def _flash_bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dd_ref,
+                          dk_ref, dv_ref, dk_acc, dv_acc, *, sm_scale,
+                          causal, window, bq, bk, kv_len, nq):
+    """grid (B, Hkv, Skv/bk, group*Sq/bq): innermost flattens (group, iq);
+    accumulates this kv block's dk/dv over all query heads in the GQA group
+    and all query blocks."""
+    ik, jj = pl.program_id(2), pl.program_id(3)
+    nj = pl.num_programs(3)
+    iq = jj % nq
+
+    @pl.when(jj == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    do = do_ref[0, 0].astype(jnp.float32)
+    lse = lse_ref[0, 0][:, None]
+    dd = dd_ref[0, 0][:, None]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+    mask = _mask(s, iq, ik, bq, bk, causal, window, kv_len)
+    p = jnp.where(mask, jnp.exp(s - lse), 0.0)                 # (bq, bk)
+    dv_acc[...] += jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.float32)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - dd) * sm_scale                              # (bq, bk)
+    dk_acc[...] += jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.float32)
+
+    @pl.when(jj == nj - 1)
+    def _finish():
+        dk_ref[0, 0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "sm_scale", "bq", "bk",
+                              "kv_len", "interpret"))
+def flash_attention_bwd_blocks(q, k, v, out, lse, do, *, sm_scale,
+                               causal=True, window=None, bq=128, bk=128,
+                               kv_len=None, interpret=False):
+    """Backward pass: returns (dq, dk, dv). Two kernels — dq iterates kv
+    blocks per q block; dk/dv iterates (group x q blocks) per kv block.
+    dd = rowsum(do * out) is the standard flash-backward precomputation."""
+    b, h, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = h // hkv
+    kv_len = kv_len if kv_len is not None else skv
+    dd = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32),
+                 axis=-1)                                       # (B, H, Sq)
+    nq, nk = sq // bq, skv // bk
+
+    q_spec = pl.BlockSpec((1, 1, bq, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0))
+    kv_spec = pl.BlockSpec(
+        (1, 1, bk, d), lambda b_, h_, iq, ik, g=group: (b_, h_ // g, ik, 0))
+    r_spec = pl.BlockSpec((1, 1, bq), lambda b_, h_, iq, ik: (b_, h_, iq))
+    dq = pl.pallas_call(
+        functools.partial(_flash_bwd_dq_kernel, sm_scale=sm_scale,
+                          causal=causal, window=window, bq=bq, bk=bk,
+                          kv_len=kv_len),
+        grid=(b, h, nq, nk),
+        in_specs=[q_spec, kv_spec, kv_spec, q_spec, r_spec, r_spec],
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, d), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, dd)
+
+    # dk/dv: grid (B, Hkv, nk, group*nq); q-side blocks indexed by the
+    # flattened (g, iq) innermost axis
+    qh_spec = pl.BlockSpec(
+        (1, 1, bq, d),
+        lambda b_, kh, ik, jj, g=group, n=nq: (b_, kh * g + jj // n, jj % n, 0))
+    rh_spec = pl.BlockSpec(
+        (1, 1, bq),
+        lambda b_, kh, ik, jj, g=group, n=nq: (b_, kh * g + jj // n, jj % n))
+    kvo_spec = pl.BlockSpec((1, 1, bk, d), lambda b_, kh, ik, jj: (b_, kh, ik, 0))
+    dk, dv = pl.pallas_call(
+        functools.partial(_flash_bwd_dkv_kernel, sm_scale=sm_scale,
+                          causal=causal, window=window, bq=bq, bk=bk,
+                          kv_len=kv_len, nq=nq),
+        grid=(b, hkv, nk, group * nq),
+        in_specs=[qh_spec, kvo_spec, kvo_spec, qh_spec, rh_spec, rh_spec],
+        out_specs=[kvo_spec, kvo_spec],
+        out_shape=[jax.ShapeDtypeStruct(k.shape, k.dtype),
+                   jax.ShapeDtypeStruct(v.shape, v.dtype)],
+        scratch_shapes=[pltpu.VMEM((bk, d), jnp.float32),
+                        pltpu.VMEM((bk, d), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, dd)
+    return dq, dk, dv

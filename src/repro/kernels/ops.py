@@ -1,0 +1,138 @@
+"""Public jit'd wrappers around the Pallas kernels: padding, layout, backend
+dispatch (interpret mode off-TPU), and shape restoration.
+
+These are the entry points the rest of the framework uses; each has a
+pure-jnp oracle in repro.kernels.ref and a sweep test in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rmsnorm_pallas as _rn
+from repro.kernels import topsis_pallas as _tp
+
+_EPS = 1e-12
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# --- TOPSIS -----------------------------------------------------------------
+def topsis_closeness(matrix: jax.Array, weights: jax.Array,
+                     benefit: jax.Array, *, block_n: int | None = None,
+                     interpret: bool | None = None) -> jax.Array:
+    """Closeness coefficients for (N, C) decision matrix; C <= 8.
+
+    Global reductions (column norms, ideal points) run in XLA; the O(N*C)
+    distance/closeness hot loop runs in the Pallas kernel.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    n, c = matrix.shape
+    assert c <= _tp.C_PAD, f"at most {_tp.C_PAD} criteria, got {c}"
+    w = weights / jnp.maximum(jnp.sum(weights), _EPS)
+    mat = matrix.astype(jnp.float32)
+    norms = jnp.sqrt(jnp.sum(mat * mat, axis=0))
+    inv_norm = 1.0 / jnp.maximum(norms, _EPS)
+    v = mat * inv_norm * w
+    a_pos = jnp.where(benefit, jnp.max(v, axis=0), jnp.min(v, axis=0))
+    a_neg = jnp.where(benefit, jnp.min(v, axis=0), jnp.max(v, axis=0))
+
+    if block_n is None:
+        block_n = min(_tp.DEFAULT_BLOCK_N,
+                      max(_tp.LANE, 2 ** int(np.ceil(np.log2(max(n, 1))))))
+    xt = _pad_to(_pad_to(mat.T, 0, _tp.C_PAD), 1, block_n)
+
+    def col(x):  # (C,) -> (C_PAD, 1)
+        return _pad_to(x.astype(jnp.float32)[:, None], 0, _tp.C_PAD)
+
+    cc = _tp.topsis_closeness_blocks(xt, col(inv_norm), col(w), col(a_pos),
+                                     col(a_neg), block_n=block_n,
+                                     interpret=interpret)
+    return cc[0, :n]
+
+
+# --- RMSNorm ----------------------------------------------------------------
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6, *,
+            block_rows: int = 256, interpret: bool | None = None) -> jax.Array:
+    """Fused RMSNorm over the last axis of x (any leading shape)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    d = x.shape[-1]
+    lead = x.shape[:-1]
+    rows = int(np.prod(lead)) if lead else 1
+    x2d = _pad_to(_pad_to(x.reshape(rows, d), 1, 128), 0, block_rows)
+    g2d = _pad_to(gamma.reshape(1, d), 1, 128)
+    out = _rn.rmsnorm_blocks(x2d, g2d, eps=eps, d_true=d,
+                             block_rows=min(block_rows, x2d.shape[0]),
+                             interpret=interpret)
+    return out[:rows, :d].reshape(*lead, d)
+
+
+# --- Flash attention ----------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+def _flash_core(q, k, v, causal, window, sm_scale, bq, bk, kv_len,
+                interpret):
+    out, _ = _fa.flash_attention_blocks(
+        q, k, v, sm_scale=sm_scale, causal=causal, window=window,
+        bq=bq, bk=bk, kv_len=kv_len, interpret=interpret)
+    return out
+
+
+def _flash_core_fwd(q, k, v, causal, window, sm_scale, bq, bk, kv_len,
+                    interpret):
+    out, lse = _fa.flash_attention_blocks(
+        q, k, v, sm_scale=sm_scale, causal=causal, window=window,
+        bq=bq, bk=bk, kv_len=kv_len, interpret=interpret)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_core_bwd(causal, window, sm_scale, bq, bk, kv_len, interpret,
+                    res, do):
+    q, k, v, out, lse = res
+    dq, dk, dv = _fa.flash_attention_bwd_blocks(
+        q, k, v, out, lse, do, sm_scale=sm_scale, causal=causal,
+        window=window, bq=bq, bk=bk, kv_len=kv_len, interpret=interpret)
+    return dq, dk, dv
+
+
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    sm_scale: float | None = None, bq: int = 128,
+                    bk: int = 128, interpret: bool | None = None) -> jax.Array:
+    """(B, H, S, D) GQA flash attention; pads S to block multiples and D to
+    the 128-lane boundary. Differentiable: backward runs the flash backward
+    Pallas kernels (dq + fused dk/dv), not a rematerialized-score fallback."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, h, sq, d = q.shape
+    skv = k.shape[2]
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    bq = min(bq, max(8, 1 << (sq - 1).bit_length()))
+    bk = min(bk, max(8, 1 << (skv - 1).bit_length()))
+    qp = _pad_to(_pad_to(q, 2, bq), 3, 128)
+    kp = _pad_to(_pad_to(k, 2, bk), 3, 128)
+    vp = _pad_to(_pad_to(v, 2, bk), 3, 128)
+    out = _flash_core(qp, kp, vp, causal, window, sm_scale, bq, bk, skv,
+                      interpret)
+    return out[:, :, :sq, :d]

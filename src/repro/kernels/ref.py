@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantic ground truth: tests sweep shapes/dtypes and
+``assert_allclose`` the kernels (run in interpret mode on CPU) against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+# --- TOPSIS batch scoring ---------------------------------------------------
+def topsis_closeness_ref(matrix: jax.Array, weights: jax.Array,
+                         benefit: jax.Array) -> jax.Array:
+    """Closeness coefficients for an (N, C) decision matrix (float32).
+
+    Mirrors repro.core.topsis.closeness without the valid-mask path (the
+    fleet batch-scorer filters infeasible slices before scoring).
+    """
+    weights = weights / jnp.maximum(jnp.sum(weights), _EPS)
+    norms = jnp.sqrt(jnp.sum(matrix * matrix, axis=0, keepdims=True))
+    v = matrix / jnp.maximum(norms, _EPS) * weights
+    a_pos = jnp.where(benefit, jnp.max(v, axis=0), jnp.min(v, axis=0))
+    a_neg = jnp.where(benefit, jnp.min(v, axis=0), jnp.max(v, axis=0))
+    d_pos = jnp.sqrt(jnp.sum((v - a_pos) ** 2, axis=1))
+    d_neg = jnp.sqrt(jnp.sum((v - a_neg) ** 2, axis=1))
+    cc = d_neg / jnp.maximum(d_pos + d_neg, _EPS)
+    return jnp.where(d_pos + d_neg <= _EPS, 0.5, cc)
+
+
+# --- RMSNorm ----------------------------------------------------------------
+def rmsnorm_ref(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * rms * gamma.astype(jnp.float32)).astype(dtype)
+
+
+# --- Flash attention (causal / full) ----------------------------------------
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True, sm_scale: float | None = None,
+                  window: int | None = None) -> jax.Array:
+    """(B, H, S, D) x (B, Hkv, S, D) -> (B, H, S, D); GQA broadcast when
+    H > Hkv; optional sliding window (mixtral)."""
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    if hkv != h:
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * sm_scale
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), dtype=bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= ki > qi - window
+    logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,68 @@
+"""Pallas TPU kernel for fleet-scale TOPSIS batch scoring.
+
+At 1000+ node scale the scheduler scores N candidate slices x C criteria for
+every arriving job; the hot loop is the weighted-normalize + two Euclidean
+distances + closeness. This kernel tiles alternatives along the TPU lane axis
+(layout (C_pad, N): criteria on sublanes, alternatives on lanes) so the
+distance reduction is a cheap sublane reduction, and streams N in VMEM-sized
+blocks.
+
+Column norms and the ideal/anti-ideal rows are global O(N*C) reductions,
+computed once in the wrapper (repro.kernels.ops.topsis_closeness) — the
+kernel consumes them as small VMEM-resident operands.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+C_PAD = 8          # criteria padded to one sublane group
+DEFAULT_BLOCK_N = 2048
+
+_EPS = 1e-12
+
+
+def _topsis_kernel(xt_ref, inv_norm_ref, w_ref, a_pos_ref, a_neg_ref, cc_ref):
+    """One block: xt (C_PAD, BLOCK_N) raw criteria (transposed);
+    inv_norm/w/a_pos/a_neg (C_PAD, 1); out cc (1, BLOCK_N).
+
+    Padded criteria rows carry zeros in w and a_pos/a_neg, so they
+    contribute nothing to the distances.
+    """
+    xt = xt_ref[...].astype(jnp.float32)
+    v = xt * inv_norm_ref[...] * w_ref[...]            # weighted normalized
+    dp = v - a_pos_ref[...]
+    dn = v - a_neg_ref[...]
+    d_pos = jnp.sqrt(jnp.sum(dp * dp, axis=0, keepdims=True))
+    d_neg = jnp.sqrt(jnp.sum(dn * dn, axis=0, keepdims=True))
+    denom = d_pos + d_neg
+    cc = d_neg / jnp.maximum(denom, _EPS)
+    cc_ref[...] = jnp.where(denom <= _EPS, 0.5, cc)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def topsis_closeness_blocks(xt: jax.Array, inv_norm: jax.Array, w: jax.Array,
+                            a_pos: jax.Array, a_neg: jax.Array,
+                            block_n: int = DEFAULT_BLOCK_N,
+                            interpret: bool = False) -> jax.Array:
+    """xt: (C_PAD, N_pad) with N_pad % block_n == 0; small operands (C_PAD, 1).
+    Returns (1, N_pad) closeness coefficients."""
+    c_pad, n_pad = xt.shape
+    assert c_pad == C_PAD and n_pad % block_n == 0, (xt.shape, block_n)
+    grid = (n_pad // block_n,)
+    small = pl.BlockSpec((C_PAD, 1), lambda i: (0, 0))
+    return pl.pallas_call(
+        _topsis_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((C_PAD, block_n), lambda i: (0, i)),
+            small, small, small, small,
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n_pad), jnp.float32),
+        interpret=interpret,
+    )(xt, inv_norm, w, a_pos, a_neg)

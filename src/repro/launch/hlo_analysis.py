@@ -1,0 +1,599 @@
+"""Trip-count-aware roofline analysis of post-optimization HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE, so a
+scanned 61-layer model under-reports flops/bytes/collectives by ~61x. This
+module re-derives the three roofline terms by parsing the compiled HLO,
+multiplying every ``while`` body by its ``known_trip_count`` (recursively —
+gradient-accumulation scans contain layer scans contain MoE chunk maps).
+
+Cost model (per-device — post-SPMD shapes are per-partition):
+
+  flops:
+    dot            2 * prod(result) * prod(contracting dims)
+    convolution    2 * prod(result) * prod(kernel) / out_features
+    elementwise    prod(result)   (1 flop/element; transcendentals too)
+    reduce/map/... prod(largest operand)
+    fusion         flops of the fused computation (inner dots counted)
+
+  bytes (HBM traffic):
+    instruction    sum(operand bytes) + result bytes
+    fusion         operands + result of the FUSION only (fused intermediates
+                   never leave registers — that is the point of fusion)
+    dynamic-slice / gather              ~2 * result (reads only the slice)
+    dynamic-update-slice / scatter      ~2 * update operand
+    parameter/constant/tuple/gte/bitcast  0 (aliasing, no traffic)
+
+  collective bytes (per-device bytes over ICI, ring algorithms):
+    all-reduce       2(n-1)/n * size
+    all-gather         (n-1)/n * size     (size = gathered result)
+    reduce-scatter     (n-1)   * size     (size = scattered result)
+    all-to-all         (n-1)/n * size
+    collective-permute       1 * size
+
+Used by launch/dryrun.py for EXPERIMENTS.md §Roofline and by the §Perf loop
+(``top_contributors`` shows which op_name dominates each term).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Any
+
+_SHAPE_RE = re.compile(
+    r"(f64|f32|bf16|f16|s64|s32|u64|u32|s16|u16|s8|u8|pred|c64|c128|"
+    r"f8e4m3fn|f8e5m2|s4|u4)\[([0-9,]*)\]")
+_BYTES = {"f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+          "f32": 4, "s32": 4, "u32": 4, "bf16": 2, "f16": 2, "s16": 2,
+          "u16": 2, "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1,
+          "f8e5m2": 1, "s4": 0.5, "u4": 0.5}
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s+=\s+(.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\((.*)\)\s+->")
+_OPCODE_RE = re.compile(r"^([\w\[\]{},.]+\s+)?([a-z][a-z0-9\-]*)\(")
+_BARE_OPCODE_RE = re.compile(r"^\s*([a-z][a-z0-9\-]*)\(")
+_PARAM_RE = re.compile(r"([\w.\-]+):\s+((?:\([^)]*\))|(?:[\w\[\]{},]+))")
+_TRIP_RE = re.compile(r"known_trip_count\D*(\d+)")
+_GROUP_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CDIM_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+_SKIP = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+         "after-all", "partition-id", "replica-id", "iota", "opt-barrier"}
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "exponential-minus-one", "log", "log-plus-one",
+    "tanh", "logistic", "rsqrt", "sqrt", "cbrt", "power", "sign", "floor",
+    "ceil", "round-nearest-afz", "round-nearest-even", "compare", "select",
+    "and", "or", "xor", "not", "clamp", "convert", "cosine", "sine", "tan",
+    "atan2", "erf", "is-finite", "remainder", "shift-left",
+    "shift-right-logical", "shift-right-arithmetic", "stochastic-convert"}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+
+def _shape_bytes(type_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _BYTES[dt]
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    total = 0
+    for _, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    result_type: str
+    operands: list[str]
+    attrs: str
+    metadata_op: str = ""
+    raw_operands: str = ""
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: dict[str, str]            # param name -> type string
+    instrs: list[Instr]
+    shapes: dict[str, str]            # value name -> type string
+
+
+def _split_operands(rest: str, op_end: int) -> tuple[str, str]:
+    """rest[op_end:] starts right after the opcode's '('. Returns
+    (operand substring, attribute substring)."""
+    depth = 1
+    i = op_end
+    while i < len(rest) and depth:
+        if rest[i] == "(":
+            depth += 1
+        elif rest[i] == ")":
+            depth -= 1
+        i += 1
+    return rest[op_end:i - 1], rest[i:]
+
+
+def parse_module(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m and line.endswith("{"):
+                params = dict(_PARAM_RE.findall(m.group(2)))
+                cur = Computation(m.group(1), params, [], dict(params))
+            continue
+        if line.strip().startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        if rest.startswith("("):
+            # tuple result type — find the matching ')' by paren counting
+            # (regexes break on /*index=N*/ comments inside the tuple)
+            depth, i = 1, 1
+            while i < len(rest) and depth:
+                if rest[i] == "(":
+                    depth += 1
+                elif rest[i] == ")":
+                    depth -= 1
+                i += 1
+            result_type = rest[:i]
+            om = _BARE_OPCODE_RE.match(rest[i:])
+            if not om:
+                continue
+            opcode = om.group(1)
+            operands_str, attrs = _split_operands(rest, i + om.end())
+        else:
+            om = _OPCODE_RE.match(rest)
+            if not om:
+                continue
+            result_type = (om.group(1) or "").strip()
+            opcode = om.group(2)
+            operands_str, attrs = _split_operands(rest, om.end())
+        operands = _OPERAND_RE.findall(operands_str)
+        meta = ""
+        mm = re.search(r'op_name="([^"]*)"', attrs)
+        if mm:
+            meta = mm.group(1)
+        cur.instrs.append(Instr(name, opcode, result_type, operands,
+                                attrs, meta, operands_str))
+        cur.shapes[name] = result_type
+    return comps
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0       # dot / convolution flops (exact shapes)
+    eflops: float = 0.0      # elementwise / reduction flops (cappable)
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += mult * other.flops
+        self.eflops += mult * other.eflops
+        self.bytes += mult * other.bytes
+        self.coll_bytes += mult * other.coll_bytes
+        for k, v in other.coll.items():
+            slot = self.coll.setdefault(k, {"count": 0.0, "bytes": 0.0})
+            slot["count"] += mult * v["count"]
+            slot["bytes"] += mult * v["bytes"]
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    out = _shape_elems(ins.result_type)
+    cm = _CDIM_RE.search(ins.attrs)
+    k = 1
+    if cm and ins.operands:
+        lhs_t = comp.shapes.get(ins.operands[0], "")
+        dims = _shape_dims(lhs_t)
+        for d in cm.group(1).split(","):
+            if d and int(d) < len(dims):
+                k *= dims[int(d)]
+    return 2.0 * out * k
+
+
+def _conv_flops(ins: Instr, comp: Computation) -> float:
+    out = _shape_elems(ins.result_type)
+    kern = _shape_dims(comp.shapes.get(ins.operands[1], "")) \
+        if len(ins.operands) > 1 else []
+    kprod = 1
+    for d in kern:
+        kprod *= d
+    odims = _shape_dims(ins.result_type)
+    feat = max(odims) if odims else 1  # crude: kernel includes out-features
+    return 2.0 * out * max(kprod // max(feat, 1), 1)
+
+
+def _coll_moved(ins: Instr) -> float:
+    size = _shape_bytes(ins.result_type)
+    g = _GROUP_RE.search(ins.attrs)
+    n = int(g.group(2)) if g else 2
+    op = ins.opcode.replace("-start", "")
+    if op == "all-reduce":
+        return 2.0 * (n - 1) / n * size
+    if op == "all-gather":
+        return (n - 1) / n * size
+    if op == "reduce-scatter":
+        return float(n - 1) * size
+    if op in ("all-to-all", "ragged-all-to-all"):
+        return (n - 1) / n * size
+    return float(size)   # collective-permute
+
+
+def _instr_bytes(ins: Instr, comp: Computation) -> float:
+    res = _shape_bytes(ins.result_type)
+    if ins.opcode in ("dynamic-slice", "gather"):
+        return 2.0 * res
+    if ins.opcode in ("dynamic-update-slice", "scatter"):
+        upd = (_shape_bytes(comp.shapes.get(ins.operands[1], ""))
+               if len(ins.operands) > 1 else res)
+        return 2.0 * upd
+    ops = sum(_shape_bytes(comp.shapes.get(o, "")) for o in ins.operands)
+    return ops + res
+
+
+# Pallas kernels lowered with interpret=True appear as plain HLO loops; the
+# kernel body computes in VMEM on real TPUs, and its HBM traffic is exactly
+# the BlockSpec streaming the interpreter expresses as dynamic-slice /
+# dynamic-update-slice on the full operands. Instructions scoped to these
+# op_names charge bytes only for that streaming.
+_VMEM_SCOPE_RE = re.compile(
+    r"jit\((flash_attention\w*_blocks|rmsnorm\w*_blocks|topsis\w*_blocks)\)"
+    r"|pallas_call")
+
+
+class Analyzer:
+    def __init__(self, hlo: str):
+        self.comps = parse_module(hlo)
+        # computation-level VMEM scoping: metadata-less instructions (layout
+        # copies etc.) inherit the scope of their computation
+        self._comp_vmem: dict[str, bool] = {}
+        for name, comp in self.comps.items():
+            tagged = [i for i in comp.instrs if i.metadata_op]
+            hits = sum(bool(_VMEM_SCOPE_RE.search(i.metadata_op))
+                       for i in tagged)
+            self._comp_vmem[name] = bool(tagged) and hits >= len(tagged) / 2
+        self._memo: dict[str, Cost] = {}
+        entry = [c for c in self.comps if "main" in c]
+        self.entry = entry[0] if entry else next(iter(self.comps))
+        # contributor ledger: op_name -> [flops, bytes, coll_bytes]
+        self.contrib: dict[str, list[float]] = {}
+
+    def _record(self, ins: Instr, fl: float, by: float, cb: float,
+                mult: float):
+        key = ins.metadata_op or ins.opcode
+        slot = self.contrib.setdefault(key, [0.0, 0.0, 0.0])
+        slot[0] += fl * mult
+        slot[1] += by * mult
+        slot[2] += cb * mult
+
+    def cost_of(self, comp_name: str, mult: float = 1.0) -> Cost:
+        """Cost of one execution of `comp_name`; contributor ledger is
+        accumulated with the cumulative trip multiplier `mult`."""
+        if comp_name in self._memo:
+            c = self._memo[comp_name]
+            self._bump_contrib(comp_name, mult)
+            return c
+        comp = self.comps.get(comp_name)
+        total = Cost()
+        if comp is None:
+            return total
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op in _SKIP:
+                continue
+            fl = by = cb = 0.0
+            # an instruction is VMEM-resident if its own scope matches OR it
+            # lives in a majority-Pallas computation (interpret-mode loop
+            # carries drag in boundary-tagged copies that Mosaic keeps in
+            # VMEM on real hardware)
+            in_vmem = (bool(_VMEM_SCOPE_RE.search(ins.metadata_op))
+                       or self._comp_vmem.get(comp_name, False))
+            if in_vmem and op not in ("while", "fusion", "call",
+                                      "conditional", "dynamic-slice",
+                                      "dynamic-update-slice", "gather",
+                                      "scatter", "dot", "convolution"):
+                # VMEM-resident compute inside a Pallas kernel body: flops
+                # count, HBM bytes do not.
+                if op in _ELEMENTWISE or op in ("reduce", "reduce-window",
+                                                "map", "sort", "top-k"):
+                    total.eflops += float(_shape_elems(ins.result_type))
+                    if mult:
+                        self._record(
+                            ins, float(_shape_elems(ins.result_type)),
+                            0.0, 0.0, mult)
+                continue
+            if op == "while":
+                trip = 1
+                tm = _TRIP_RE.search(ins.attrs)
+                if tm:
+                    trip = int(tm.group(1))
+                body = _BODY_RE.search(ins.attrs)
+                cond = _COND_RE.search(ins.attrs)
+                sub = Cost()
+                if body:
+                    sub.add(self.cost_of(body.group(1), mult * trip), trip)
+                if cond:
+                    sub.add(self.cost_of(cond.group(1), mult * trip), trip)
+                total.add(sub)
+                continue
+            if op == "fusion":
+                cm = _CALLS_RE.search(ins.attrs)
+                if cm:
+                    inner = self.cost_of(cm.group(1), 0.0)  # ledger: skip
+                    # XLA fusions compute only the elements the output
+                    # needs: cap the ELEMENTWISE portion of inner flops at
+                    # (#elementwise ops x output elements). Dots/convs keep
+                    # their true shapes.
+                    if in_vmem:
+                        # Pallas-interpret loop-carry fusions shuffle full
+                        # arrays that live in VMEM/registers on real TPUs;
+                        # only genuine MXU (dot) work counts here.
+                        efl = 0.0
+                    else:
+                        efl = min(inner.eflops,
+                                  self._ew_count(cm.group(1))
+                                  * _shape_elems(ins.result_type))
+                    fl = inner.flops + efl
+                    if in_vmem:
+                        by = self._streaming_bytes(cm.group(1))
+                    elif self._is_legalization_convert(cm.group(1)):
+                        # XLA CPU float-normalization (bf16<->f32 wrapper):
+                        # free on native-bf16 TPU hardware — excluded from
+                        # the roofline memory term.
+                        fl = by = 0.0
+                    else:
+                        by = self._fusion_bytes(ins, comp, cm.group(1))
+                else:
+                    by = _instr_bytes(ins, comp)
+            elif op == "call":
+                cm = _CALLS_RE.search(ins.attrs) or re.search(
+                    r"to_apply=%?([\w.\-]+)", ins.attrs)
+                if cm:
+                    total.add(self.cost_of(cm.group(1), mult))
+                continue
+            elif op == "conditional":
+                branches = re.findall(
+                    r"(?:branch_computations=\{([^}]*)\}|"
+                    r"true_computation=%?([\w.\-]+)|"
+                    r"false_computation=%?([\w.\-]+))", ins.attrs)
+                names: list[str] = []
+                for tup in branches:
+                    for part in tup:
+                        if part:
+                            names.extend(
+                                x.strip().lstrip("%")
+                                for x in part.split(",") if x.strip())
+                if names:
+                    worst = max((self.cost_of(n, 0.0) for n in names),
+                                key=lambda c: c.flops + c.bytes,
+                                default=Cost())
+                    total.add(worst)
+                continue
+            elif op == "dot":
+                fl = _dot_flops(ins, comp)
+                by = 0.0 if in_vmem else _instr_bytes(ins, comp)
+            elif op == "convolution":
+                fl = _conv_flops(ins, comp)
+                by = 0.0 if in_vmem else _instr_bytes(ins, comp)
+            elif op.replace("-start", "") in _COLLECTIVES:
+                cb = _coll_moved(ins)
+                by = _instr_bytes(ins, comp)
+                key = op.replace("-start", "")
+                slot = total.coll.setdefault(key,
+                                             {"count": 0.0, "bytes": 0.0})
+                slot["count"] += 1
+                slot["bytes"] += cb
+            elif op.endswith("-done") or op.endswith("-update"):
+                continue
+            elif op == "convert" and ins.operands:
+                src = comp.shapes.get(ins.operands[0], "")
+                sm, dm = _SHAPE_RE.search(src), _SHAPE_RE.search(
+                    ins.result_type)
+                if sm and dm and {sm.group(1), dm.group(1)} == {"bf16",
+                                                                "f32"}:
+                    continue   # CPU float-normalization; free on TPU
+                fl = 0.0       # precision conversion: no arithmetic
+                by = _instr_bytes(ins, comp)
+            elif op in _ELEMENTWISE or op in ("copy", "broadcast", "reshape",
+                                              "transpose", "pad", "slice",
+                                              "concatenate", "reverse",
+                                              "reduce", "reduce-window",
+                                              "map", "sort", "select-and-scatter",
+                                              "rng", "rng-bit-generator",
+                                              "cholesky", "triangular-solve",
+                                              "dynamic-slice",
+                                              "dynamic-update-slice",
+                                              "gather", "scatter",
+                                              "custom-call", "top-k"):
+                if op in _ELEMENTWISE or op in ("reduce", "reduce-window",
+                                                "map", "sort", "top-k"):
+                    fl = float(_shape_elems(ins.result_type))
+                by = _instr_bytes(ins, comp)
+            else:
+                by = _instr_bytes(ins, comp)
+            if op == "dot" or op == "convolution" or op == "fusion":
+                total.flops += fl
+            else:
+                total.eflops += fl
+            total.bytes += by
+            total.coll_bytes += cb
+            if mult:
+                self._record(ins, fl, by, cb, mult)
+        self._memo[comp_name] = total
+        return total
+
+    def _ew_count(self, comp_name: str) -> int:
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return 0
+        return sum(1 for i in comp.instrs
+                   if i.opcode in _ELEMENTWISE
+                   or i.opcode in ("reduce", "reduce-window", "map"))
+
+    def _streaming_bytes(self, called: str) -> float:
+        """HBM traffic of a VMEM-scoped (Pallas-interpret) fused computation:
+        only its block loads/stores move data."""
+        inner = self.comps.get(called)
+        if inner is None:
+            return 0.0
+        total = 0.0
+        for ii in inner.instrs:
+            if ii.opcode in ("dynamic-slice", "gather"):
+                total += 2.0 * _shape_bytes(ii.result_type)
+            elif ii.opcode in ("dynamic-update-slice", "scatter"):
+                upd = (inner.shapes.get(ii.operands[1], "")
+                       if len(ii.operands) > 1 else "")
+                total += 2.0 * _shape_bytes(upd)
+        return total
+
+    def _is_legalization_convert(self, called: str) -> bool:
+        """True when the fused computation is a bare bf16<->f32 convert."""
+        inner = self.comps.get(called)
+        if inner is None:
+            return False
+        body = [i for i in inner.instrs if i.opcode != "parameter"]
+        if len(body) != 1 or body[0].opcode != "convert":
+            return False
+        src = inner.shapes.get(body[0].operands[0], "") if body[0].operands \
+            else ""
+        dst = body[0].result_type
+        kinds = {t.split("[")[0] for t in
+                 (_SHAPE_RE.search(src).group(1) if _SHAPE_RE.search(src)
+                  else "",
+                  _SHAPE_RE.search(dst).group(1) if _SHAPE_RE.search(dst)
+                  else "")}
+        return kinds == {"bf16", "f32"}
+
+    def _fusion_bytes(self, ins: Instr, comp: Computation,
+                      called: str) -> float:
+        """HBM traffic of a fusion = operands + result, EXCEPT operands that
+        the fused computation only slices/gathers from (embedding lookups,
+        KV-cache reads/writes): those cost ~the slice, not the buffer."""
+        inner = self.comps.get(called)
+        if inner is None:
+            return _instr_bytes(ins, comp)
+        # map fusion operand position -> inner parameter name
+        param_of: dict[int, str] = {}
+        for ii in inner.instrs:
+            if ii.opcode == "parameter":
+                try:
+                    param_of[int(ii.raw_operands.strip())] = ii.name
+                except ValueError:
+                    pass
+        # result side: a fusion rooted in dynamic-update-slice over a buffer
+        # of the fusion's own result shape is an IN-PLACE carry update on
+        # TPU (output aliasing) — charge the update slice, not the buffer.
+        total = _shape_bytes(ins.result_type)
+        for ii in inner.instrs:
+            if ii.opcode == "dynamic-update-slice" \
+                    and _shape_dims(ii.result_type) \
+                    == _shape_dims(ins.result_type):
+                upd = (inner.shapes.get(ii.operands[1], "")
+                       if len(ii.operands) > 1 else "")
+                total = min(total, 2.0 * _shape_bytes(upd))
+                break
+
+        def charge(vname: str, full: float, depth: int = 0) -> float:
+            """Bytes actually read from value `vname` inside the fusion.
+            Sees through single-use converts (XLA CPU's bf16->f32
+            legalization wraps cache updates in converts; on native-bf16
+            TPU hardware those are free)."""
+            uses = [ii for ii in inner.instrs if vname in ii.operands]
+            if not uses or depth > 3:
+                return full
+            sliced = 0.0
+            for u in uses:
+                if u.opcode in ("dynamic-slice", "gather") \
+                        and u.operands and u.operands[0] == vname:
+                    sliced += _shape_bytes(u.result_type)
+                elif u.opcode in ("dynamic-update-slice", "scatter") \
+                        and u.operands and u.operands[0] == vname:
+                    upd = (inner.shapes.get(u.operands[1], "")
+                           if len(u.operands) > 1 else u.result_type)
+                    sliced += _shape_bytes(upd)
+                elif u.opcode in ("convert", "bitcast", "copy",
+                                  "reshape") and len(uses) == 1:
+                    sliced += charge(u.name, full, depth + 1)
+                else:
+                    return full
+            return min(sliced, full)
+
+        for pos, oname in enumerate(ins.operands):
+            full = _shape_bytes(comp.shapes.get(oname, ""))
+            pname = param_of.get(pos)
+            total += full if pname is None else charge(pname, full)
+        return total
+
+    def _bump_contrib(self, comp_name: str, mult: float):
+        # memoized path: re-credit contributors without re-walking
+        comp = self.comps.get(comp_name)
+        if comp is None or not mult:
+            return
+        for ins in comp.instrs:
+            if ins.opcode in _SKIP:
+                continue
+            # cheap re-credit for leaf instrs only (nested whiles re-walk)
+            if ins.opcode == "while":
+                trip = 1
+                tm = _TRIP_RE.search(ins.attrs)
+                if tm:
+                    trip = int(tm.group(1))
+                for attr_re in (_BODY_RE, _COND_RE):
+                    m = attr_re.search(ins.attrs)
+                    if m:
+                        self._bump_contrib(m.group(1), mult * trip)
+                continue
+
+    def analyze(self) -> Cost:
+        return self.cost_of(self.entry, 1.0)
+
+
+def analyze(hlo: str) -> dict[str, Any]:
+    """Top-level: per-device trip-adjusted flops / HBM bytes / collective
+    bytes + per-collective breakdown."""
+    a = Analyzer(hlo)
+    c = a.analyze()
+    return {"flops_per_dev": c.flops + c.eflops, "bytes_per_dev": c.bytes,
+            "collective_bytes_per_dev": c.coll_bytes,
+            "collectives": {k: {"count": v["count"], "bytes": v["bytes"]}
+                            for k, v in sorted(c.coll.items())}}
+
+
+def top_contributors(hlo: str, n: int = 15, key: str = "bytes"
+                     ) -> list[tuple[str, list[float]]]:
+    """Largest contributors by 'flops' | 'bytes' | 'coll' — the dry-run
+    profiler for the §Perf hypothesis loop."""
+    a = Analyzer(hlo)
+    a.analyze()
+    idx = {"flops": 0, "bytes": 1, "coll": 2}[key]
+    return sorted(a.contrib.items(), key=lambda kv: -kv[1][idx])[:n]

@@ -1,0 +1,71 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+No device allocation — these drive .lower()/.compile() in the dry-run and
+give the roofline terms. Modality frontends are STUBS per the assignment:
+[audio] supplies post-conv frame embeddings, [vlm] supplies patch embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    arch: str
+    shape: str            # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: str             # train | prefill | decode
+
+
+def cell(arch: str, shape: str) -> Cell:
+    seq, batch, kind = registry.SHAPES[shape]
+    return Cell(arch, shape, seq, batch, kind)
+
+
+def all_cells() -> list[Cell]:
+    out = []
+    for arch in registry.ARCH_IDS:
+        for shape in registry.shapes_for(arch):
+            out.append(cell(arch, shape))
+    return out
+
+
+def model_inputs(cfg: ModelConfig, c: Cell) -> dict:
+    """Batch ShapeDtypeStructs for train/prefill. Decode uses cache_specs."""
+    b = {"tokens": SDS((c.global_batch, c.seq_len), jnp.int32)}
+    if cfg.cross_attn_every:
+        b["vision"] = SDS((c.global_batch, cfg.n_vision_tokens, cfg.d_model),
+                          jnp.float32)
+    if cfg.enc_dec:
+        b["frames"] = SDS((c.global_batch, cfg.n_audio_frames, cfg.d_model),
+                          jnp.float32)
+    return b
+
+
+def params_specs(model: lm.LM):
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def opt_state_specs(opt_cfg: adamw.AdamWConfig, pspecs):
+    return jax.eval_shape(lambda p: adamw.init(opt_cfg, p), pspecs)
+
+
+def cache_specs(model: lm.LM, batch_size: int, max_len: int):
+    return jax.eval_shape(
+        lambda: model.init_cache(batch_size, max_len))
+
+
+def decode_token_specs(c: Cell):
+    return SDS((c.global_batch,), jnp.int32)

@@ -1,0 +1,505 @@
+"""Unified language-model builder for all assigned architectures.
+
+A model is a sequence of SEGMENTS; each segment is n identical blocks whose
+params are stacked on axis 0 and applied with jax.lax.scan (keeps the lowered
+HLO size independent of depth — essential for compiling deepseek-v3's 61
+layers x 512 devices). Segment kinds:
+
+  dense      — GQA attention (+opt sliding window) + swiglu/geglu FFN
+  moe        — GQA attention + capacity-based MoE FFN
+  mla_dense  — deepseek MLA attention + dense FFN (leading layers)
+  mla_moe    — deepseek MLA attention + MoE with shared expert
+  vlm_group  — k-1 self-attn blocks + 1 gated cross-attn block (llama-vision)
+  mamba      — Mamba2 (SSD) blocks (zamba2 tail)
+  mamba_group— k Mamba2 blocks + one SHARED full-attn block (zamba2)
+  rwkv       — RWKV6 time-mix + channel-mix
+  enc / dec  — whisper encoder (bidirectional) / decoder (self+cross)
+
+Public API (build(cfg) -> LM): init, loss, prefill, decode, init_cache,
+input_specs-compatible batch conventions (see repro/launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import mamba2, moe, rwkv6
+from repro.models.config import ModelConfig
+from repro.models.layers import (apply_rope, attention, attn_init, dense_init,
+                                 dot, ffn, ffn_init, mla_attention, mla_init,
+                                 rmsnorm)
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    name: str
+    kind: str
+    n_blocks: int
+
+
+def segments_for(cfg: ModelConfig) -> list[Segment]:
+    if cfg.rwkv:
+        return [Segment("rwkv", "rwkv", cfg.n_layers)]
+    if cfg.enc_dec:
+        return [Segment("enc", "enc", cfg.n_encoder_layers),
+                Segment("dec", "dec", cfg.n_layers)]
+    if cfg.ssm_state and cfg.attn_every:
+        n_groups = cfg.n_layers // cfg.attn_every
+        rest = cfg.n_layers - n_groups * cfg.attn_every
+        segs = [Segment("mamba_group", "mamba_group", n_groups)]
+        if rest:
+            segs.append(Segment("mamba_tail", "mamba", rest))
+        return segs
+    if cfg.cross_attn_every:
+        assert cfg.n_layers % cfg.cross_attn_every == 0
+        return [Segment("vlm", "vlm_group",
+                        cfg.n_layers // cfg.cross_attn_every)]
+    if cfg.is_moe:
+        segs = []
+        if cfg.n_dense_layers:
+            kind = "mla_dense" if cfg.use_mla else "dense"
+            segs.append(Segment("dense_prefix", kind, cfg.n_dense_layers))
+        kind = "mla_moe" if cfg.use_mla else "moe"
+        segs.append(Segment("moe", kind, cfg.n_layers - cfg.n_dense_layers))
+        return segs
+    return [Segment("dense", "dense", cfg.n_layers)]
+
+
+# --- per-block init -----------------------------------------------------------
+def _block_init(kind: str, cfg: ModelConfig):
+    D = cfg.d_model
+
+    def norm():
+        return jnp.ones((D,), jnp.float32)
+
+    def init(key):
+        ks = jax.random.split(key, 6)
+        if kind == "dense":
+            return {"ln1": norm(), "attn": attn_init(ks[0], cfg),
+                    "ln2": norm(), "ffn": ffn_init(ks[1], cfg)}
+        if kind == "moe":
+            return {"ln1": norm(), "attn": attn_init(ks[0], cfg),
+                    "ln2": norm(), "moe": moe.moe_init(ks[1], cfg)}
+        if kind == "mla_dense":
+            return {"ln1": norm(), "attn": mla_init(ks[0], cfg),
+                    "ln2": norm(), "ffn": ffn_init(ks[1], cfg)}
+        if kind == "mla_moe":
+            return {"ln1": norm(), "attn": mla_init(ks[0], cfg),
+                    "ln2": norm(), "moe": moe.moe_init(ks[1], cfg)}
+        if kind == "vlm_group":
+            k = cfg.cross_attn_every
+            self_init = _block_init("dense", cfg)
+            return {"selfs": jax.vmap(self_init)(jax.random.split(ks[0], k)),
+                    "x_ln": norm(), "xattn": attn_init(ks[1], cfg),
+                    "x_gate": jnp.zeros((), jnp.float32),
+                    "x_ln2": norm(), "xffn": ffn_init(ks[2], cfg),
+                    "xffn_gate": jnp.zeros((), jnp.float32)}
+        if kind == "mamba":
+            return {"ln1": norm(), "mamba": mamba2.mamba2_init(ks[0], cfg)}
+        if kind == "mamba_group":
+            k = cfg.attn_every
+            m_init = _block_init("mamba", cfg)
+            return {"mambas": jax.vmap(m_init)(jax.random.split(ks[0], k))}
+        if kind == "rwkv":
+            return {"ln1": norm(), "ln2": norm(),
+                    "rwkv": rwkv6.rwkv6_init(ks[0], cfg)}
+        if kind == "enc":
+            return {"ln1": norm(), "attn": attn_init(ks[0], cfg),
+                    "ln2": norm(), "ffn": ffn_init(ks[1], cfg)}
+        if kind == "dec":
+            return {"ln1": norm(), "attn": attn_init(ks[0], cfg),
+                    "lnx": norm(), "xattn": attn_init(ks[1], cfg),
+                    "ln2": norm(), "ffn": ffn_init(ks[2], cfg)}
+        raise ValueError(kind)
+
+    return init
+
+
+# --- per-block cache ------------------------------------------------------------
+def _block_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int):
+    dt = jnp.dtype(cfg.dtype)
+    hd = cfg.hd
+
+    def kv():
+        return {"k": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dt),
+                "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dt)}
+
+    if kind in ("dense", "moe", "enc"):
+        return kv()
+    if kind in ("mla_dense", "mla_moe"):
+        return {"kv_c": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dt),
+                "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim),
+                                    dt)}
+    if kind == "vlm_group":
+        k = cfg.cross_attn_every
+        return {"selfs": jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (k,) + x.shape), kv())}
+    if kind == "mamba":
+        return {"m": mamba2.mamba2_init_state(cfg, batch)}
+    if kind == "mamba_group":
+        k = cfg.attn_every
+        # each inner block's cache is {"m": state} — must match the
+        # structure _apply_block("mamba") emits (dry-run out_shardings
+        # compare pytree structures exactly)
+        return {"mambas": jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (k,) + x.shape),
+            {"m": mamba2.mamba2_init_state(cfg, batch)}),
+            "shared_kv": kv()}
+    if kind == "rwkv":
+        return rwkv6.rwkv6_block_state(cfg, batch)
+    if kind == "dec":
+        return kv()   # self-attn cache; cross k/v precomputed at prefill
+    raise ValueError(kind)
+
+
+# --- per-block apply --------------------------------------------------------------
+def _apply_block(kind: str, cfg: ModelConfig, p: Params, x, *, mode: str,
+                 cache, pos, extras: dict):
+    """mode: 'full' (train/prefill, cache None or written via prefill path
+    using functional attention without cache) or 'step' (decode, S==1).
+    Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    eps = cfg.norm_eps
+
+    def with_kv(pblk, xin, kv_cache, causal=True, use_rope=True, kv_src=None):
+        c = None
+        if kv_cache is not None:
+            c = dict(kv_cache, len=pos)
+        out, newc = attention(pblk, cfg, xin, positions=pos_arr(xin), causal=causal,
+                              cache=c, use_rope=use_rope, kv_src=kv_src)
+        if newc is not None:
+            newc = {"k": newc["k"], "v": newc["v"]}
+        return out, newc
+
+    def pos_arr(xin):
+        s = xin.shape[1]
+        if mode == "step":
+            return pos + jnp.arange(s)
+        return jnp.arange(s)
+
+    if kind in ("dense", "moe", "enc"):
+        h, newc = with_kv(p["attn"], rmsnorm(x, p["ln1"], eps), cache,
+                          causal=(kind != "enc"),
+                          use_rope=not cfg.enc_dec)
+        x = x + h
+        y = rmsnorm(x, p["ln2"], eps)
+        if kind == "moe":
+            f, aux = moe.moe_ffn(p["moe"], cfg, y, extras["n_groups"])
+        else:
+            f = ffn(p["ffn"], cfg, y)
+        return x + f, newc, aux
+
+    if kind in ("mla_dense", "mla_moe"):
+        c = dict(cache, len=pos) if cache is not None else None
+        h, newc = mla_attention(p["attn"], cfg, rmsnorm(x, p["ln1"], eps),
+                                positions=pos_arr(x), cache=c)
+        if newc is not None:
+            newc = {"kv_c": newc["kv_c"], "k_rope": newc["k_rope"]}
+        x = x + h
+        y = rmsnorm(x, p["ln2"], eps)
+        if kind == "mla_moe":
+            f, aux = moe.moe_ffn(p["moe"], cfg, y, extras["n_groups"])
+        else:
+            f = ffn(p["ffn"], cfg, y)
+        return x + f, newc, aux
+
+    if kind == "vlm_group":
+        k = cfg.cross_attn_every
+        caches = cache["selfs"] if cache is not None else None
+
+        def body(i, x):
+            blk = jax.tree.map(lambda a: a[i], p["selfs"])
+            c_i = jax.tree.map(lambda a: a[i], caches) if caches is not None \
+                else None
+            x, newc, _ = _apply_block("dense", cfg, blk, x, mode=mode,
+                                      cache=c_i, pos=pos, extras=extras)
+            return x, newc
+
+        new_selfs = []
+        for i in range(k):     # unrolled: k is small (5)
+            x, nc = body(i, x)
+            new_selfs.append(nc)
+        # gated cross-attention to vision tokens (cast: the f32 gate must
+        # not promote the bf16 residual stream — scan carries fixed dtypes)
+        h, _ = attention(p["xattn"], cfg, rmsnorm(x, p["x_ln"], eps),
+                         kv_src=extras["vision"], use_rope=False)
+        x = x + (jnp.tanh(p["x_gate"]) * h).astype(x.dtype)
+        f = ffn(p["xffn"], cfg, rmsnorm(x, p["x_ln2"], eps))
+        x = x + (jnp.tanh(p["xffn_gate"]) * f).astype(x.dtype)
+        newc = None
+        if caches is not None:
+            newc = {"selfs": jax.tree.map(
+                lambda *xs: jnp.stack(xs), *new_selfs)}
+        return x, newc, aux
+
+    if kind == "mamba":
+        xin = rmsnorm(x, p["ln1"], eps)
+        if cache is None:                      # training
+            h, new_st = mamba2.mamba2_forward(p["mamba"], cfg, xin)
+        elif x.shape[1] > 1:                   # prefill: parallel + final state
+            h, new_st = mamba2.mamba2_forward(p["mamba"], cfg, xin,
+                                              return_state=True)
+        else:                                  # decode: O(1) state update
+            h, new_st = mamba2.mamba2_forward(p["mamba"], cfg, xin,
+                                              state=cache["m"])
+        return x + h, ({"m": new_st} if new_st is not None else None), aux
+
+    if kind == "mamba_group":
+        k = cfg.attn_every
+        new_m = []
+        for i in range(k):
+            blk = jax.tree.map(lambda a: a[i], p["mambas"])
+            c_i = (jax.tree.map(lambda a: a[i], cache["mambas"])
+                   if cache is not None else None)
+            x, nc, _ = _apply_block("mamba", cfg, blk, x, mode=mode,
+                                    cache=c_i, pos=pos, extras=extras)
+            new_m.append(nc)
+        # SHARED attention block (same params every group — zamba2)
+        sp = extras["shared_attn"]
+        skv = cache["shared_kv"] if cache is not None else None
+        h, new_skv = None, None
+        c = dict(skv, len=pos) if skv is not None else None
+        h, newc = attention(sp["attn"], cfg, rmsnorm(x, sp["ln1"], eps),
+                            positions=(pos + jnp.arange(x.shape[1])
+                                       if mode == "step"
+                                       else jnp.arange(x.shape[1])),
+                            cache=c)
+        x = x + h
+        f = ffn(sp["ffn"], cfg, rmsnorm(x, sp["ln2"], eps))
+        x = x + f
+        out_cache = None
+        if cache is not None:
+            out_cache = {"mambas": jax.tree.map(lambda *xs: jnp.stack(xs),
+                                                *new_m),
+                         "shared_kv": {"k": newc["k"], "v": newc["v"]}}
+        return x, out_cache, aux
+
+    if kind == "rwkv":
+        st = cache if cache is not None else rwkv6.rwkv6_block_state(
+            cfg, x.shape[0])
+        h, tm_state = rwkv6.time_mix(p["rwkv"], cfg,
+                                     rmsnorm(x, p["ln1"], eps), st)
+        x = x + h
+        h, cm_state = rwkv6.channel_mix(p["rwkv"], cfg,
+                                        rmsnorm(x, p["ln2"], eps), st)
+        x = x + h
+        newc = {**tm_state, **cm_state} if cache is not None else None
+        return x, newc, aux
+
+    if kind == "dec":
+        h, newc = with_kv(p["attn"], rmsnorm(x, p["ln1"], eps), cache,
+                          use_rope=False)
+        x = x + h
+        hx, _ = attention(p["xattn"], cfg, rmsnorm(x, p["lnx"], eps),
+                          kv_src=extras["enc_out"], use_rope=False)
+        x = x + hx
+        f = ffn(p["ffn"], cfg, rmsnorm(x, p["ln2"], eps))
+        return x + f, newc, aux
+
+    raise ValueError(kind)
+
+
+# --- segment scan ------------------------------------------------------------------
+def _scan_segment(seg: Segment, cfg: ModelConfig, params: Params, x, *,
+                  mode: str, cache, pos, extras):
+    """Scan blocks of one segment. params leaves stacked (n, ...); cache
+    leaves stacked (n, ...) or None."""
+    def body(carry, inp):
+        x = carry
+        blk, c = inp
+        f = functools.partial(_apply_block, seg.kind, cfg, mode=mode,
+                              pos=pos, extras=extras)
+        if cfg.remat and mode == "full":
+            f = jax.checkpoint(f)
+        x, newc, aux = f(blk, x, cache=c)
+        return x, (newc, aux)
+
+    xs = (params, cache)
+    x, (new_cache, auxs) = jax.lax.scan(body, x, xs)
+    return x, new_cache, jnp.sum(auxs)
+
+
+# --- positional embedding for enc-dec (whisper uses learned/sinusoid) -----------
+def _sinusoid(max_len: int, d: int):
+    pos = jnp.arange(max_len, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000 ** (dim / d))
+    pe = jnp.zeros((max_len, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(ang)).at[:, 1::2].set(jnp.cos(ang))
+    return pe
+
+
+# --- top-level model ---------------------------------------------------------------
+class LM(NamedTuple):
+    cfg: ModelConfig
+    init: Callable
+    loss: Callable
+    prefill: Callable
+    decode: Callable
+    init_cache: Callable
+
+
+def build(cfg: ModelConfig) -> LM:
+    segs = segments_for(cfg)
+    dt = jnp.dtype(cfg.dtype)
+
+    def init(key) -> Params:
+        ks = jax.random.split(key, len(segs) + 4)
+        p: Params = {
+            "embed": (jax.random.normal(ks[0], (cfg.vocab, cfg.d_model),
+                                        jnp.float32) * 0.02).astype(dt),
+            "final_ln": jnp.ones((cfg.d_model,), jnp.float32),
+        }
+        if not cfg.tie_embeddings:
+            p["lm_head"] = dense_init(ks[1], cfg.d_model, cfg.vocab, dt)
+        for i, seg in enumerate(segs):
+            init_b = _block_init(seg.kind, cfg)
+            p[seg.name] = jax.vmap(init_b)(
+                jax.random.split(ks[2 + i], seg.n_blocks))
+        if cfg.attn_every:   # zamba2 shared attention block
+            kb = jax.random.split(ks[-1], 3)
+            p["shared_attn"] = {
+                "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+                "attn": attn_init(kb[0], cfg),
+                "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+                "ffn": ffn_init(kb[1], cfg)}
+        return p
+
+    def _extras(params, batch, mode, caches=None):
+        ex: dict[str, Any] = {"n_groups": cfg.moe_groups}
+        if cfg.cross_attn_every:
+            ex["vision"] = (batch["vision"].astype(dt) if "vision" in batch
+                            else caches["vision"])
+        if cfg.attn_every:
+            ex["shared_attn"] = params["shared_attn"]
+        return ex
+
+    def _embed(params, tokens):
+        return params["embed"][tokens]
+
+    def _unembed(params, x):
+        x = rmsnorm(x, params["final_ln"], cfg.norm_eps)
+        w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        return jax.lax.dot_general(
+            x, w, (((x.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    def _encoder(params, batch, ex):
+        frames = batch["frames"].astype(dt)      # (B, Fr, D) stub frontend
+        pe = _sinusoid(frames.shape[1], cfg.d_model).astype(dt)
+        h = frames + pe[None]
+        h, _, _ = _scan_segment(segs[0], cfg, params["enc"], h,
+                                mode="full", cache=None, pos=0, extras=ex)
+        return rmsnorm(h, params["final_ln"], cfg.norm_eps)
+
+    def forward(params, batch, mode="full", caches=None, pos=0):
+        """Returns (hidden (B,S,D), new_caches, aux)."""
+        tokens = batch["tokens"]
+        ex = _extras(params, batch, mode, caches)
+        x = _embed(params, tokens)
+        if cfg.enc_dec:
+            if mode == "full" or "frames" in batch:     # train or prefill
+                ex["enc_out"] = _encoder(params, batch, ex)
+            else:                                       # decode
+                ex["enc_out"] = caches["enc_out"]
+            pe = _sinusoid(65536, cfg.d_model).astype(dt)
+            s = tokens.shape[1]
+            x = x + jax.lax.dynamic_slice_in_dim(pe, pos, s, 0)[None] \
+                if mode == "step" else x + pe[None, :s]
+        aux_total = jnp.zeros((), jnp.float32)
+        new_caches = {} if caches is not None else None
+        body_segs = segs[1:] if cfg.enc_dec else segs
+        for seg in body_segs:
+            c = caches[seg.name] if caches is not None else None
+            x, nc, aux = _scan_segment(seg, cfg, params[seg.name], x,
+                                       mode=mode, cache=c, pos=pos, extras=ex)
+            aux_total = aux_total + aux
+            if new_caches is not None:
+                new_caches[seg.name] = nc
+        if new_caches is not None and cfg.enc_dec:
+            new_caches["enc_out"] = ex["enc_out"]
+        if new_caches is not None and cfg.cross_attn_every:
+            new_caches["vision"] = ex["vision"]
+        return x, new_caches, aux_total
+
+    def _chunked_ce(params, hidden, targets, mask, chunk=1024):
+        """Cross-entropy with S-chunked logit materialization."""
+        B, S, D = hidden.shape
+        chunk = min(chunk, S)
+        pad = (-S) % chunk
+        if pad:
+            hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+            targets = jnp.pad(targets, ((0, 0), (0, pad)))
+            mask = jnp.pad(mask, ((0, 0), (0, pad)))
+        n = hidden.shape[1] // chunk
+
+        def ce(args):
+            h, t, m = args
+            logits = _unembed(params, h)                      # f32
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+            return jnp.sum((lse - gold) * m)
+
+        hs = hidden.reshape(B, n, chunk, D).transpose(1, 0, 2, 3)
+        ts = targets.reshape(B, n, chunk).transpose(1, 0, 2)
+        ms = mask.reshape(B, n, chunk).transpose(1, 0, 2)
+        totals = jax.lax.map(ce, (hs, ts, ms))
+        return jnp.sum(totals) / jnp.maximum(jnp.sum(mask), 1.0)
+
+    def loss(params, batch):
+        tokens = batch["tokens"]
+        inp = {**batch, "tokens": tokens[:, :-1]}
+        hidden, _, aux = forward(params, inp, mode="full")
+        targets = tokens[:, 1:]
+        mask = jnp.ones_like(targets, jnp.float32)
+        ce = _chunked_ce(params, hidden, targets, mask)
+        total = ce + 0.01 * aux
+        return total, {"ce": ce, "aux": aux}
+
+    def init_cache(batch_size: int, max_len: int):
+        caches: dict[str, Any] = {"len": jnp.zeros((), jnp.int32)}
+        body_segs = segs[1:] if cfg.enc_dec else segs
+        for seg in body_segs:
+            one = _block_cache(seg.kind, cfg, batch_size, max_len)
+            caches[seg.name] = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (seg.n_blocks,) + x.shape)
+                .copy(), one)
+        if cfg.enc_dec:
+            caches["enc_out"] = jnp.zeros(
+                (batch_size, cfg.n_audio_frames, cfg.d_model), dt)
+        if cfg.cross_attn_every:
+            caches["vision"] = jnp.zeros(
+                (batch_size, cfg.n_vision_tokens, cfg.d_model), dt)
+        return caches
+
+    def prefill(params, batch, max_len: int):
+        """Run the full prompt, build a decode cache of size max_len.
+        Returns (last_logits (B, V), caches)."""
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        caches = init_cache(B, max_len)
+        pos = jnp.zeros((), jnp.int32)
+        x, new_caches, _ = forward(params, batch, mode="step",
+                                   caches=caches, pos=pos)
+        new_caches["len"] = jnp.full((), S, jnp.int32)
+        logits = _unembed(params, x[:, -1:, :])[:, 0]
+        return logits, new_caches
+
+    def decode(params, caches, tokens):
+        """One decode step. tokens: (B,) int32. Returns (logits, caches)."""
+        pos = caches["len"]
+        batch = {"tokens": tokens[:, None]}
+        x, new_caches, _ = forward(params, batch, mode="step",
+                                   caches={k: v for k, v in caches.items()
+                                           if k != "len"}, pos=pos)
+        new_caches["len"] = pos + 1
+        logits = _unembed(params, x)[:, 0]
+        return logits, new_caches
+
+    return LM(cfg, init, loss, prefill, decode, init_cache)

@@ -1,0 +1,173 @@
+"""Mamba2 (SSD) block — chunked parallel scan for train/prefill, O(1)-state
+recurrence for decode. Used by zamba2's hybrid stack.
+
+State-space: h_t = exp(A*dt_t) h_{t-1} + dt_t * B_t x_t ;  y_t = C_t h_t + D x_t
+with per-head scalar A (Mamba2 restriction), B/C shared across heads
+(n_groups=1), head dim P, state dim N.
+
+Train/prefill uses the SSD chunked algorithm (intra-chunk quadratic attention
+form + inter-chunk state recurrence via scan over chunks), which maps to MXU
+matmuls instead of a length-S sequential scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import Params, dense_init, dot, rmsnorm
+
+
+def mamba2_dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def mamba2_init(key, cfg: ModelConfig) -> Params:
+    D = cfg.d_model
+    d_inner, H, P, N = mamba2_dims(cfg)
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.dtype)
+    # input projections split by TP semantics: z/x shard over heads (model
+    # axis), B/C are head-shared (replicated), dt is per-head.
+    return {
+        "in_zx": dense_init(ks[0], D, 2 * d_inner, dt),
+        "in_bc": dense_init(ks[5], D, 2 * N, dt),
+        "in_dt": dense_init(ks[3], D, H, dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, d_inner + 2 * N),
+                                     jnp.float32) * 0.2).astype(dt),
+        "a_log": jnp.zeros((H,), jnp.float32),        # A = -exp(a_log)
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_g": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[4], d_inner, D, dt),
+    }
+
+
+def _ssd_chunked(x, dt_, A, B, C, chunk: int):
+    """SSD chunked scan.
+    x: (b, s, h, p); dt_: (b, s, h) >0; A: (h,) <0; B, C: (b, s, n).
+    Returns y: (b, s, h, p)."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    nc = s // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt_.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, n)
+    Cc = C.reshape(b, nc, chunk, n)
+
+    da = dtc * A                                    # (b,nc,l,h) log-decay
+    cum = jnp.cumsum(da, axis=2)                    # within-chunk cumsum
+    # intra-chunk ("attention") term: L[i,j] = exp(cum_i - cum_j) for i>=j
+    li = cum[:, :, :, None, :]                      # (b,nc,i,1,h)
+    lj = cum[:, :, None, :, :]                      # (b,nc,1,j,h)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, :, :, None]
+    Lmat = jnp.where(mask, jnp.exp(li - lj), 0.0)   # (b,nc,i,j,h)
+    CB = jnp.einsum("bcin,bcjn->bcij", Cc, Bc,
+                    preferred_element_type=jnp.float32)      # (b,nc,i,j)
+    y_intra = jnp.einsum("bcij,bcijh,bcjh,bcjhp->bcihp",
+                         CB, Lmat, dtc, xc.astype(jnp.float32))
+
+    # chunk-final states: S_c = sum_j exp(cum_L - cum_j) dt_j B_j x_j^T
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)          # (b,nc,l,h)
+    states = jnp.einsum("bcjh,bcjh,bcjn,bcjhp->bchnp",
+                        decay_to_end, dtc, Bc, xc.astype(jnp.float32))
+    chunk_decay = jnp.exp(jnp.sum(da, axis=2))               # (b,nc,h)
+
+    def step(h_prev, inp):
+        st, dec = inp                                        # (b,h,n,p),(b,h)
+        h_new = h_prev * dec[..., None, None] + st
+        return h_new, h_prev
+
+    init = jnp.zeros((b, h, n, p), jnp.float32)
+    h_final, h_in = jax.lax.scan(step,
+                                 init,
+                                 (states.transpose(1, 0, 2, 3, 4),
+                                  chunk_decay.transpose(1, 0, 2)))
+    h_in = h_in.transpose(1, 0, 2, 3, 4)                     # (b,nc,h,n,p)
+
+    # inter-chunk contribution: y_i += C_i exp(cum_i) h_in
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp",
+                         Cc, jnp.exp(cum), h_in)
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y.astype(x.dtype), h_final
+
+
+def mamba2_forward(p: Params, cfg: ModelConfig, x, *, chunk: int = 256,
+                   state=None, return_state: bool = False):
+    """x: (B, S, D). state None -> chunked parallel path (train; prefill when
+    return_state=True, which also emits the post-prompt decode state);
+    state dict -> single-step decode (S==1), returns (y, state')."""
+    B, S, D = x.shape
+    d_inner, H, P, N = mamba2_dims(cfg)
+    zx = dot(x, p["in_zx"])
+    z, xin = jnp.split(zx, [d_inner], axis=-1)
+    bc = dot(x, p["in_bc"])
+    Bc, Cc = jnp.split(bc, [N], axis=-1)
+    dt_ = dot(x, p["in_dt"])
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)        # (B,S,din+2N)
+
+    if state is None:
+        # causal depthwise conv via explicit pad + stacked shifts
+        k = cfg.ssm_conv
+        padded = jnp.pad(conv_in, ((0, 0), (k - 1, 0), (0, 0)))
+        conv = sum(padded[:, i:i + S, :] * p["conv_w"][i].astype(x.dtype)
+                   for i in range(k))
+        conv = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+        xin, Bc, Cc = jnp.split(conv, [d_inner, d_inner + N], axis=-1)
+        dt_ = jax.nn.softplus(dt_.astype(jnp.float32) + p["dt_bias"])
+        A = -jnp.exp(p["a_log"])
+        chunk = min(chunk, S)
+        pad = (-S) % chunk
+        if pad:
+            xin = jnp.pad(xin, ((0, 0), (0, pad), (0, 0)))
+            Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+            Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+            dt_ = jnp.pad(dt_, ((0, 0), (0, pad), (0, 0)))
+        xh = xin.reshape(B, S + pad, H, P)
+        y, h_final = _ssd_chunked(xh, dt_, A, Bc, Cc, min(chunk, S + pad))
+        y = y[:, :S]
+        y = y + xh[:, :S] * p["d_skip"][None, None, :, None].astype(x.dtype)
+        y = y.reshape(B, S, d_inner)
+        y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                    p["norm_g"], cfg.norm_eps)
+        out = dot(y, p["out_proj"])
+        if not return_state:
+            return out, None
+        # decode state after the prompt: final ssm state + last conv inputs.
+        # h_final from the scan is the state AFTER the last chunk; with pad>0
+        # the padded tail (x=0, dt>0) would spuriously decay it, so prefill
+        # lengths must be chunk-aligned (all assigned shapes are).
+        assert pad == 0, "prefill length must be a multiple of the ssd chunk"
+        k = cfg.ssm_conv
+        tail = conv_in[:, -(k):, :] if S >= k else jnp.pad(
+            conv_in, ((0, 0), (k - S, 0), (0, 0)))
+        return out, {"conv": tail, "ssm": h_final}
+
+    # --- decode: S == 1, O(1) state update ---
+    conv_buf = jnp.concatenate([state["conv"][:, 1:, :], conv_in], axis=1)
+    conv = jnp.sum(conv_buf * p["conv_w"].astype(x.dtype)[None], axis=1,
+                   keepdims=True)
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+    xin, Bc, Cc = jnp.split(conv, [d_inner, d_inner + N], axis=-1)
+    dt1 = jax.nn.softplus(dt_.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+    A = -jnp.exp(p["a_log"])
+    xh = xin.reshape(B, H, P).astype(jnp.float32)
+    dec = jnp.exp(dt1 * A)                                   # (B,H)
+    h_new = (state["ssm"] * dec[..., None, None]
+             + jnp.einsum("bh,bn,bhp->bhnp", dt1, Bc[:, 0].astype(jnp.float32),
+                          xh))
+    y = jnp.einsum("bn,bhnp->bhp", Cc[:, 0].astype(jnp.float32), h_new)
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(B, 1, d_inner).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                p["norm_g"], cfg.norm_eps)
+    return dot(y, p["out_proj"]), {"conv": conv_buf, "ssm": h_new}
+
+
+def mamba2_init_state(cfg: ModelConfig, batch: int):
+    d_inner, H, P, N = mamba2_dims(cfg)
+    return {"conv": jnp.zeros((batch, cfg.ssm_conv, d_inner + 2 * N),
+                              jnp.dtype(cfg.dtype)),
+            "ssm": jnp.zeros((batch, H, N, P), jnp.float32)}

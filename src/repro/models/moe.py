@@ -1,0 +1,153 @@
+"""Mixture-of-Experts FFN with capacity-based (GShard-style) token dispatch.
+
+Formulation: tokens grouped by data shard (G groups of S tokens). The router
+produces top-k expert choices; tokens are packed into per-expert capacity
+slots C = ceil(S * top_k * capacity_factor / E) via a one-hot dispatch tensor
+(G, S, E, C). All contractions are einsums so pjit shards them:
+
+  G -> data axis, E -> model axis (expert parallelism when E >= |model|;
+  otherwise experts are replicated and the expert hidden dim F is
+  tensor-parallel over model).
+
+Per-device dispatch memory is (S_loc * E_loc * C) — kept small via
+microbatching (train/loop.py). Overflowing tokens are dropped (standard
+capacity semantics); the combine weights renormalize over surviving slots.
+
+DeepSeek-V3 extras: n_shared_experts dense experts always applied; router
+uses sigmoid affinity + per-expert bias (aux-loss-free balancing is left to
+the optimizer-side bias update, implemented in update_router_bias).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import Params, dense_init, dot, ffn, ffn_init
+
+
+def moe_init(key, cfg: ModelConfig) -> Params:
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.dtype)
+    p = {
+        "router": dense_init(ks[0], D, E, jnp.float32, scale=0.02),
+        "router_bias": jnp.zeros((E,), jnp.float32),
+        "w1": (jax.random.normal(ks[1], (E, D, F), jnp.float32)
+               * D ** -0.5).astype(dt),
+        "w3": (jax.random.normal(ks[2], (E, D, F), jnp.float32)
+               * D ** -0.5).astype(dt),
+        "w2": (jax.random.normal(ks[3], (E, F, D), jnp.float32)
+               * F ** -0.5).astype(dt),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = ffn_init(ks[4], cfg,
+                               d_ff=cfg.moe_d_ff * cfg.n_shared_experts)
+    return p
+
+
+def capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
+    c = int(tokens_per_group * cfg.top_k * cfg.capacity_factor
+            // cfg.n_experts) + 1
+    return max(c, cfg.top_k)
+
+
+def route(p: Params, cfg: ModelConfig, x_flat: jax.Array):
+    """x_flat: (G, S, D) -> (combine (G,S,E,C) f32, dispatch (G,S,E,C) bool,
+    aux_loss scalar)."""
+    G, S, D = x_flat.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = capacity(cfg, S)
+    logits = jnp.einsum("gsd,de->gse", x_flat.astype(jnp.float32),
+                        p["router"])
+    # deepseek-style sigmoid affinity with balancing bias for SELECTION,
+    # softmax-normalized weights for COMBINATION
+    gates = jax.nn.softmax(logits, axis=-1)
+    sel_score = gates + p["router_bias"]
+    _, topk_idx = jax.lax.top_k(sel_score, K)               # (G, S, K)
+
+    # position of each (token, k) within its expert, in token order
+    onehot = jax.nn.one_hot(topk_idx, E, dtype=jnp.float32)  # (G, S, K, E)
+    flat = onehot.reshape(G, S * K, E)
+    pos = (jnp.cumsum(flat, axis=1) - flat).reshape(G, S, K, E)
+    pos = jnp.sum(pos * onehot, axis=-1)                     # (G, S, K)
+    keep = pos < C
+    gate_k = jnp.take_along_axis(gates, topk_idx, axis=-1) * keep
+    denom = jnp.sum(gate_k, axis=-1, keepdims=True)
+    gate_k = gate_k / jnp.maximum(denom, 1e-9)
+
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, C), C + 1,
+                            dtype=jnp.float32)[..., :C]      # (G,S,K,C)
+    # contract over k WITHOUT materializing (G,S,K,E,C)
+    dispatch = jnp.einsum("gske,gskc->gsec", onehot, pos_oh) > 0
+    combine = jnp.einsum("gske,gskc->gsec", onehot * gate_k[..., None],
+                         pos_oh)
+
+    # load-balancing aux loss (Switch): E * sum(frac_tokens * frac_prob)
+    me = jnp.mean(onehot.sum(2), axis=(0, 1))                # fraction routed
+    ce = jnp.mean(gates, axis=(0, 1))
+    aux = E * jnp.sum(me * ce) / cfg.top_k
+    return combine, dispatch, aux
+
+
+# dispatch one-hots scale with tokens-per-group^2 / E; beyond this many
+# tokens per group the sequence is processed in chunks (exact — routing is
+# per-token; only capacity boundaries move, as in any production MoE server).
+_MOE_CHUNK_TOKENS = 16384
+
+
+def moe_ffn(p: Params, cfg: ModelConfig, x: jax.Array, n_groups: int):
+    """x: (B, S, D) -> (out, aux_loss). Tokens regrouped to (G, S', D)."""
+    B, S, D = x.shape
+    if B * S > n_groups * _MOE_CHUNK_TOKENS and S % 2 == 0:
+        n_chunks = 2
+        while (B * (S // n_chunks) > n_groups * _MOE_CHUNK_TOKENS
+               and (S // n_chunks) % 2 == 0):
+            n_chunks *= 2
+        xc = x.reshape(B, n_chunks, S // n_chunks, D).transpose(1, 0, 2, 3)
+        outs, auxs = jax.lax.map(
+            lambda xs: moe_ffn(p, cfg, xs, n_groups), xc)
+        return (outs.transpose(1, 0, 2, 3).reshape(B, S, D),
+                jnp.mean(auxs))
+    T = B * S
+    G = n_groups
+    assert T % G == 0, (T, G)
+    xg = x.reshape(G, T // G, D)
+    combine, dispatch, aux = route(p, cfg, xg)
+    ein = jnp.einsum
+
+    def ep(t):
+        """Two-level expert parallelism (§Perf, deepseek-v3): when expert
+        weights shard E over (data x model), re-shard the dispatched slot
+        tensor from token-sharded (G over data) to expert-sharded so the
+        expert matmuls are fully local. The SPMD partitioner lowers this
+        constraint to the EP all-to-all; without it, it all-gathers every
+        token to every expert owner (40 TB/device on deepseek-v3 train)."""
+        if not cfg.ep_axes:
+            return t
+        from jax.sharding import PartitionSpec
+        spec = PartitionSpec(None, tuple(cfg.ep_axes),
+                             *([None] * (t.ndim - 2)))
+        return jax.lax.with_sharding_constraint(t, spec)
+
+    xin = ep(ein("gsec,gsd->gecd", dispatch.astype(x.dtype), xg))  # (G,E,C,D)
+    h = ein("gecd,edf->gecf", xin, p["w1"],
+            preferred_element_type=jnp.float32).astype(x.dtype)
+    h3 = ein("gecd,edf->gecf", xin, p["w3"],
+             preferred_element_type=jnp.float32).astype(x.dtype)
+    h = jax.nn.silu(h) * h3
+    eo = ep(ein("gecf,efd->gecd", h, p["w2"],
+                preferred_element_type=jnp.float32).astype(x.dtype))
+    out = ein("gsec,gecd->gsd", combine.astype(x.dtype), eo)
+    out = out.reshape(B, S, D)
+    if cfg.n_shared_experts:
+        out = out + ffn(p["shared"], cfg, x)
+    return out, aux
+
+
+def update_router_bias(bias: jax.Array, expert_load: jax.Array,
+                       step_size: float = 1e-3) -> jax.Array:
+    """DeepSeek-V3 aux-loss-free balancing: nudge selection bias against
+    overloaded experts (called from the train loop with per-step loads)."""
+    target = jnp.mean(expert_load)
+    return bias + step_size * jnp.sign(target - expert_load)

@@ -1,0 +1,113 @@
+"""RWKV-6 "Finch" block: time-mix with data-dependent decay + channel-mix.
+
+Recurrence per head (state S in R^{N x N}, N = head size):
+  S_t = diag(w_t) S_{t-1} + k_t^T v_t
+  y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+with w_t = exp(-exp(decay_t)) data-dependent (the Finch novelty vs RWKV-5).
+
+Training/prefill runs the recurrence with lax.scan over time (linear in S —
+the arch's entire point for the long_500k shape); decode is one state update.
+The low-rank token-shift interpolation (LoRA mix) is simplified to a single
+learned per-channel mix, which preserves the compute/memory shape of the
+published block (DESIGN.md notes this deviation).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import Params, dense_init, dot, rmsnorm
+
+HEAD_N = 64
+
+
+def rwkv_dims(cfg: ModelConfig):
+    assert cfg.d_model % HEAD_N == 0
+    return cfg.d_model // HEAD_N, HEAD_N
+
+
+def rwkv6_init(key, cfg: ModelConfig) -> Params:
+    D = cfg.d_model
+    H, N = rwkv_dims(cfg)
+    ks = jax.random.split(key, 10)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "mix_r": jnp.full((D,), 0.5, jnp.float32),
+        "mix_k": jnp.full((D,), 0.5, jnp.float32),
+        "mix_v": jnp.full((D,), 0.5, jnp.float32),
+        "mix_w": jnp.full((D,), 0.5, jnp.float32),
+        "wr": dense_init(ks[0], D, D, dt),
+        "wk": dense_init(ks[1], D, D, dt),
+        "wv": dense_init(ks[2], D, D, dt),
+        "wg": dense_init(ks[3], D, D, dt),
+        "ww": dense_init(ks[4], D, D, dt, scale=1e-3),   # data-dep decay proj
+        "w_bias": jnp.full((D,), -6.0, jnp.float32),
+        "u_bonus": jnp.zeros((H, N), jnp.float32),
+        "wo": dense_init(ks[5], D, D, dt),
+        "ln_g": jnp.ones((D,), jnp.float32),
+        # channel mix
+        "cmix_k": jnp.full((D,), 0.5, jnp.float32),
+        "ck": dense_init(ks[6], D, cfg.d_ff, dt),
+        "cv": dense_init(ks[7], cfg.d_ff, D, dt),
+        "cr": dense_init(ks[8], D, D, dt),
+    }
+
+
+def _shift(x, prev):
+    """Token shift: x_{t-1} with carry-in `prev` (B, 1, D)."""
+    return jnp.concatenate([prev, x[:, :-1, :]], axis=1)
+
+
+def time_mix(p: Params, cfg: ModelConfig, x, state):
+    """x: (B, S, D); state: {tm_prev (B,1,D), wkv (B,H,N,N) f32}."""
+    B, S, D = x.shape
+    H, N = rwkv_dims(cfg)
+    xp = _shift(x, state["tm_prev"])
+
+    def mix(m):
+        return x * m.astype(x.dtype) + xp * (1 - m).astype(x.dtype)
+
+    r = dot(mix(p["mix_r"]), p["wr"]).reshape(B, S, H, N)
+    k = dot(mix(p["mix_k"]), p["wk"]).reshape(B, S, H, N)
+    v = dot(mix(p["mix_v"]), p["wv"]).reshape(B, S, H, N)
+    g = jax.nn.silu(dot(mix(p["mix_v"]), p["wg"]).astype(jnp.float32))
+    wdec = dot(mix(p["mix_w"]), p["ww"]).astype(jnp.float32) + p["w_bias"]
+    w = jnp.exp(-jnp.exp(wdec)).reshape(B, S, H, N)          # (0,1) decay
+
+    def step(s_prev, inp):
+        rt, kt, vt, wt = inp                                  # (B,H,N) each
+        kv = kt[..., :, None] * vt[..., None, :]              # (B,H,N,N)
+        out = jnp.einsum("bhn,bhnm->bhm", rt,
+                         s_prev + p["u_bonus"][..., None] * kv)
+        s_new = wt[..., None] * s_prev + kv
+        return s_new, out
+
+    xs = (r.transpose(1, 0, 2, 3).astype(jnp.float32),
+          k.transpose(1, 0, 2, 3).astype(jnp.float32),
+          v.transpose(1, 0, 2, 3).astype(jnp.float32),
+          w.transpose(1, 0, 2, 3))
+    s_final, ys = jax.lax.scan(step, state["wkv"], xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, D)             # (B,S,D) f32
+    y = rmsnorm(y.astype(x.dtype), p["ln_g"], cfg.norm_eps)
+    y = (y.astype(jnp.float32) * g).astype(x.dtype)
+    new_state = {"tm_prev": x[:, -1:, :], "wkv": s_final}
+    return dot(y, p["wo"]), new_state
+
+
+def channel_mix(p: Params, cfg: ModelConfig, x, state):
+    xp = _shift(x, state["cm_prev"])
+    m = p["cmix_k"].astype(x.dtype)
+    xm = x * m + xp * (1 - m)
+    k = dot(xm, p["ck"])
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    r = jax.nn.sigmoid(dot(xm, p["cr"]).astype(jnp.float32)).astype(x.dtype)
+    return r * dot(k, p["cv"]), {"cm_prev": x[:, -1:, :]}
+
+
+def rwkv6_block_state(cfg: ModelConfig, batch: int):
+    H, N = rwkv_dims(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    return {"tm_prev": jnp.zeros((batch, 1, cfg.d_model), dt),
+            "wkv": jnp.zeros((batch, H, N, N), jnp.float32),
+            "cm_prev": jnp.zeros((batch, 1, cfg.d_model), dt)}

@@ -1,0 +1,153 @@
+"""AdamW with optional block-quantized (int8) moments and ZeRO-1 sharding.
+
+No optax in this environment — implemented from scratch. The int8 moment
+store (blockwise absmax quantization, fp32 scales per 128-value block) cuts
+optimizer-state HBM by ~3.5x, which is what lets deepseek-v3-671b training
+state fit 512 x 16 GB chips (EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 128
+
+
+# --- blockwise int8 quantization -------------------------------------------
+@jax.tree_util.register_pytree_with_keys_class
+class QTensor:
+    """int8 moment store with SHAPE-PRESERVING layout: ``q`` has the param's
+    shape (last dim padded to a BLOCK multiple) and ``scale`` has one f32
+    absmax per last-dim block. Because q's dims mirror the param's, the
+    moments take the PARAM's PartitionSpec verbatim — the optimizer update
+    is then collective-free (no flat-view resharding; §Perf deepseek-v3).
+    ``shape`` is static pytree aux data (never traced)."""
+
+    def __init__(self, q: jax.Array, scale: jax.Array, shape: tuple):
+        self.q = q           # int8, shape[:-1] + (padded last,)
+        self.scale = scale   # f32, shape[:-1] + (n_blocks,)
+        self.shape = tuple(shape)
+
+    def tree_flatten_with_keys(self):
+        return (((jax.tree_util.DictKey("q"), self.q),
+                 (jax.tree_util.DictKey("scale"), self.scale)), self.shape)
+
+    @classmethod
+    def tree_unflatten(cls, shape, children):
+        return cls(children[0], children[1], shape)
+
+    def __repr__(self):
+        return f"QTensor(shape={self.shape})"
+
+
+def quantize(x: jax.Array) -> QTensor:
+    shape = x.shape
+    x = x.astype(jnp.float32)
+    if x.ndim == 0:
+        x = x[None]
+    last = x.shape[-1]
+    pad = (-last) % BLOCK
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    blocks = x.reshape(*x.shape[:-1], -1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=-1) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale[..., None], 1e-20)
+                  ).astype(jnp.int8)
+    return QTensor(q.reshape(*x.shape[:-1], -1), scale, shape)
+
+
+def dequantize(t: QTensor) -> jax.Array:
+    blocks = t.q.reshape(*t.q.shape[:-1], -1, BLOCK).astype(jnp.float32) \
+        * t.scale[..., None]
+    out = blocks.reshape(*t.q.shape)
+    if not t.shape:
+        return out[0]
+    last = t.shape[-1]
+    if out.shape[-1] != last:
+        out = jax.lax.slice_in_dim(out, 0, last, axis=-1)
+    return out.reshape(t.shape)
+
+
+# --- AdamW -------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    quantized_state: bool = False     # int8 m/v
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.minimum(warm, 1.0) * cos
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def init(cfg: AdamWConfig, params) -> OptState:
+    def zero_like(p):
+        z = jnp.zeros(p.shape, jnp.float32)
+        return quantize(z) if cfg.quantized_state else z
+    return OptState(jnp.zeros((), jnp.int32),
+                    jax.tree.map(zero_like, params),
+                    jax.tree.map(zero_like, params))
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def update(cfg: AdamWConfig, grads, state: OptState, params):
+    """Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        mf = dequantize(m) if cfg.quantized_state else m
+        vf = dequantize(v) if cfg.quantized_state else v
+        mf = cfg.b1 * mf + (1 - cfg.b1) * g
+        vf = cfg.b2 * vf + (1 - cfg.b2) * g * g
+        u = (mf / b1c) / (jnp.sqrt(vf / b2c) + cfg.eps)
+        if p.ndim >= 2:   # decoupled weight decay on matrices only
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+        if cfg.quantized_state:
+            return newp, quantize(mf), quantize(vf)
+        return newp, mf, vf
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, OptState(step, new_m, new_v), metrics

@@ -1,0 +1,204 @@
+"""Parameter / activation / cache sharding rules.
+
+Mapping philosophy (megatron-style TP + DP, optional pod axis for DP):
+  - batch dims       -> ("pod", "data") (or ("data",) single-pod)
+  - attention heads, FFN hidden, expert dim, vocab -> "model"
+  - layer-stack leading dims (scan) -> unsharded
+  - norms / scalars / routers -> replicated
+
+Rules match on the *leaf name* (last string key in the tree path) with a few
+contextual overrides (expert weights under a "moe" subtree). Everything not
+matched is replicated — loudly, via `explain` in launch/dryrun.py.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# leaf name -> spec over the LAST TWO dims (leading stack dims unsharded).
+# "col" = shard output dim (last), "row" = shard input dim (-2), "rep" = none.
+_COL = ("wq", "wk", "wv", "w1", "w3", "wuq", "wuk", "wuv", "wkr",
+        "in_zx", "in_dt", "wr", "wg", "ww", "ck", "cr", "lm_head")
+_ROW = ("wo", "w2", "out_proj", "cv")
+_REP = ("router", "router_bias", "ln1", "ln2", "lnx", "x_ln", "x_ln2",
+        "final_ln", "norm_g", "ln_g", "a_log", "dt_bias", "d_skip", "w_bias",
+        "mix_r", "mix_k", "mix_v", "mix_w", "cmix_k", "x_gate", "xffn_gate",
+        "wdq", "wdkv", "in_bc")
+
+
+def model_axis_size(mesh: Mesh) -> int:
+    return mesh.shape["model"]
+
+
+def batch_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _maybe(axis: str, dim_size: int, mesh: Mesh):
+    """Shard only if divisible (e.g. mixtral's 8 experts on a 16-way axis
+    fall back to replication along E; their F dim is sharded instead)."""
+    return axis if dim_size % mesh.shape[axis] == 0 else None
+
+
+def param_spec(path: tuple, leaf: Any, mesh: Mesh, *,
+               fsdp: bool = False) -> P:
+    """``fsdp=True`` additionally shards each matrix's non-TP dim over the
+    data axis (ZeRO-3 / FSDP: XLA inserts a per-scan-step all-gather of the
+    layer's weights). Required for archs whose params exceed HBM at
+    model-axis-only sharding (llama32-vision-90b, deepseek-coder-33b)."""
+    names = [p.key for p in path if isinstance(p, jax.tree_util.DictKey)]
+    name = names[-1]
+    ndim = np.ndim(leaf)
+    in_moe = "moe" in names or "shared" in names
+
+    def tail(*spec):
+        return P(*([None] * (ndim - len(spec)) + list(spec)))
+
+    def fs(dim_size):
+        """data-axis shard of the non-TP dim under fsdp."""
+        if not fsdp or "data" not in mesh.shape:
+            return None
+        return "data" if dim_size % mesh.shape["data"] == 0 else None
+
+    if name == "embed":
+        v, d = np.shape(leaf)
+        return P(_maybe("model", v, mesh), fs(d))
+    if name in ("u_bonus",):          # (H, N) rwkv per-head bonus
+        return tail("model", None)
+    if name == "conv_w":              # (k, d_inner + 2N): channels mixed ->
+        return tail(None, None)       # replicated (small)
+    if in_moe and name in ("w1", "w3", "w2"):
+        # Expert parallelism: shard E over as many mesh axes as divide it.
+        # deepseek-v3's 256 experts fill data x model = 256 (1 expert/chip);
+        # mixtral's 8 experts don't divide either axis -> TP over F instead.
+        shape3 = np.shape(leaf)[-3:]
+        e = shape3[0]
+        f_pos = 2 if name in ("w1", "w3") else 1        # F dim within (E,·,·)
+        if e % (mesh.shape.get("data", 1) * mesh.shape["model"]) == 0:
+            ax_e = ("data", "model")
+        else:
+            ax_e = _maybe("model", e, mesh)
+        spec3: list = [ax_e, None, None]
+        if ax_e is None:
+            spec3[f_pos] = "model"
+        return tail(*spec3)
+    if name in _COL:
+        return tail(fs(np.shape(leaf)[-2]),
+                    _maybe("model", np.shape(leaf)[-1], mesh))
+    if name in _ROW:
+        return tail(_maybe("model", np.shape(leaf)[-2], mesh),
+                    fs(np.shape(leaf)[-1]))
+    if name in _REP or ndim <= 1:
+        return P()
+    return P()   # default: replicate
+
+
+def params_shardings(params, mesh: Mesh, *, fsdp: bool = False):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, param_spec(path, leaf, mesh, fsdp=fsdp)),
+        params)
+
+
+def _batch_axes_for(mesh: Mesh, b: int):
+    """Largest prefix of (pod, data) that divides the batch size (long_500k
+    has global_batch=1 -> fully replicated batch)."""
+    ba = batch_axes(mesh)
+    n = int(np.prod([mesh.shape[a] for a in ba])) if ba else 1
+    if ba and b % n == 0:
+        return ba
+    if "data" in mesh.shape and b % mesh.shape["data"] == 0:
+        return ("data",)
+    return ()
+
+
+def batch_spec(mesh: Mesh, shape: tuple) -> P:
+    """Inputs: shard the leading batch dim over (pod, data) when divisible."""
+    if len(shape) == 0:
+        return P()
+    ba = _batch_axes_for(mesh, shape[0])
+    return P(ba if ba else None, *([None] * (len(shape) - 1)))
+
+
+def batch_shardings(batch, mesh: Mesh):
+    return jax.tree.map(
+        lambda leaf: NamedSharding(mesh, batch_spec(mesh, np.shape(leaf))),
+        batch)
+
+
+def cache_spec(path: tuple, leaf: Any, mesh: Mesh) -> P:
+    """KV caches / states: leading stack dim unsharded, batch dim over
+    (pod,data), heads/features over model where divisible."""
+    names = [p.key for p in path if isinstance(p, jax.tree_util.DictKey)]
+    name = names[-1]
+    ndim = np.ndim(leaf)
+    shape = np.shape(leaf)
+    if name == "len" or ndim == 0:
+        return P()
+
+    def ba_for(b_dim_size):
+        ba = _batch_axes_for(mesh, b_dim_size)
+        return ba if ba else None
+
+    if name in ("k", "v"):            # (L..., B, T, Hkv, hd)
+        hkv = shape[-2]
+        if hkv % mesh.shape["model"] == 0:
+            # TP over kv heads
+            return P(*([None] * (ndim - 4)), ba_for(shape[-4]), None,
+                     "model", None)
+        # GQA kv heads < model axis: sequence-shard the cache over T
+        # (softmax/psum over shards handled by SPMD partitioner)
+        return P(*([None] * (ndim - 4)), ba_for(shape[-4]), "model",
+                 None, None)
+    if name in ("kv_c", "k_rope"):    # (L, B, T, R) — MLA latent: shard T
+        return P(*([None] * (ndim - 3)), ba_for(shape[-3]), "model", None)
+    if name in ("enc_out", "vision"):  # (B, T, D)
+        return P(ba_for(shape[0]), None, None)
+    if name == "ssm":                 # (L..., B, H, N, P)
+        return P(*([None] * (ndim - 4)), ba_for(shape[-4]),
+                 _maybe("model", shape[-3], mesh), None, None)
+    if name == "conv":                # (L..., B, k, chans)
+        return P(*([None] * (ndim - 3)), ba_for(shape[-3]), None,
+                 _maybe("model", shape[-1], mesh))
+    if name == "wkv":                 # (L, B, H, N, N)
+        return P(*([None] * (ndim - 4)), ba_for(shape[-4]),
+                 _maybe("model", shape[-3], mesh), None, None)
+    if name in ("tm_prev", "cm_prev"):  # (L, B, 1, D)
+        return P(*([None] * (ndim - 3)), ba_for(shape[-3]), None, None)
+    # default: shard the batch-like dim if we can find it
+    return P(*([None] * (ndim - 3)), ba_for(shape[-3]), None, None) \
+        if ndim >= 3 else P()
+
+
+def cache_shardings(cache, mesh: Mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, cache_spec(path, leaf, mesh)),
+        cache)
+
+
+def zero1_state_spec(pspec: P, shape: tuple, mesh: Mesh) -> P:
+    """ZeRO-1: additionally shard optimizer moments over the data axis on the
+    largest dim the param spec leaves unsharded (falls back to the param spec
+    when nothing divides)."""
+    if "data" not in mesh.shape:
+        return pspec
+    n = mesh.shape["data"]
+    spec = list(pspec) + [None] * (len(shape) - len(pspec))
+    # axis already used (fsdp params / (data,model)-sharded experts)
+    used = set()
+    for s in spec:
+        for a in (s if isinstance(s, tuple) else (s,)):
+            used.add(a)
+    if "data" in used:
+        return pspec
+    # choose the largest unsharded dim divisible by the data axis
+    cands = [(shape[i], i) for i in range(len(shape))
+             if spec[i] is None and shape[i] % n == 0]
+    if not cands:
+        return pspec
+    _, i = max(cands)
+    spec[i] = "data"
+    return P(*spec)

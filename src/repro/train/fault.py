@@ -1,0 +1,92 @@
+"""Fault tolerance: supervised training with checkpoint/restart, straggler
+detection, and TOPSIS-driven re-placement on degradation.
+
+The supervisor wraps the train loop; any step may raise (hardware fault is
+simulated by an injected callback in tests). Recovery = restore latest
+checkpoint (elastically, onto whatever mesh is now available) and continue.
+Straggler mitigation: per-step wall times feed an EWMA; a step slower than
+`straggler_factor` x EWMA raises a StragglerAlert that the fleet layer
+answers by re-running TOPSIS placement with a degraded health criterion for
+the slow slice (repro.launch.fleet.replace_slice).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+from repro.train import checkpoint
+
+
+class StragglerAlert(RuntimeError):
+    def __init__(self, step: int, t: float, ewma: float):
+        super().__init__(f"step {step}: {t:.3f}s vs ewma {ewma:.3f}s")
+        self.step, self.t, self.ewma = step, t, ewma
+
+
+@dataclasses.dataclass
+class Supervisor:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    max_restarts: int = 3
+    straggler_factor: float = 3.0
+    ewma_alpha: float = 0.2
+    on_straggler: Callable[[StragglerAlert], None] | None = None
+
+    def run(self, *, state: dict[str, Any], step_fn, data_fn, n_steps: int,
+            fault_hook=None, shardings=None):
+        """state: {"params": ..., "opt_state": ...}; step_fn(params,
+        opt_state, batch) -> (params, opt_state, metrics); data_fn(step) ->
+        batch. Returns (final state, history). fault_hook(step) may raise to
+        simulate node failure."""
+        restarts = 0
+        pending: list = []
+        history: list[dict] = []
+        start = checkpoint.latest_step(self.ckpt_dir)
+        step = 0
+        if start is not None:
+            state = checkpoint.restore(self.ckpt_dir, start, state,
+                                       shardings)
+            step = start
+        ewma = None
+        while step < n_steps:
+            try:
+                t0 = time.perf_counter()
+                if fault_hook is not None:
+                    fault_hook(step)
+                batch = data_fn(step)
+                p, o, m = step_fn(state["params"], state["opt_state"], batch)
+                state = {"params": p, "opt_state": o}
+                dt = time.perf_counter() - t0
+                ewma = dt if ewma is None else (
+                    self.ewma_alpha * dt + (1 - self.ewma_alpha) * ewma)
+                if dt > self.straggler_factor * ewma and step > 2:
+                    alert = StragglerAlert(step, dt, ewma)
+                    if self.on_straggler:
+                        self.on_straggler(alert)
+                history.append({"step": step, "time_s": dt,
+                                **{k: float(v) for k, v in m.items()}})
+                step += 1
+                if step % self.ckpt_every == 0 or step == n_steps:
+                    pending.append(checkpoint.save(
+                        self.ckpt_dir, step, state, blocking=False))
+            except StragglerAlert:
+                raise
+            except Exception:
+                restarts += 1
+                if restarts > self.max_restarts:
+                    raise
+                last = checkpoint.latest_step(self.ckpt_dir)
+                if last is not None:
+                    state = checkpoint.restore(self.ckpt_dir, last, state,
+                                               shardings)
+                    step = last
+                else:
+                    step = 0
+        # drain async writers, then a final blocking checkpoint so
+        # restore-after-run is deterministic
+        for t in pending:
+            if t is not None:
+                t.join()
+        checkpoint.save(self.ckpt_dir, step, state, blocking=True)
+        return state, history

@@ -1,0 +1,175 @@
+"""Per-architecture smoke tests: reduced configs of the same family run one
+forward/train step on CPU; shapes + finiteness asserted. Full configs are
+exercised only via the dry-run (ShapeDtypeStructs, no allocation)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import lm
+
+ARCHS = list(registry.ALIASES)
+
+
+def make_batch(cfg, B=2, S=16, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {"tokens": jnp.asarray(rng.integers(1, cfg.vocab, (B, S)),
+                                   jnp.int32)}
+    if cfg.cross_attn_every:
+        batch["vision"] = jnp.asarray(
+            rng.normal(size=(B, cfg.n_vision_tokens, cfg.d_model)) * 0.1,
+            jnp.float32)
+    if cfg.enc_dec:
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, cfg.n_audio_frames, cfg.d_model)) * 0.1,
+            jnp.float32)
+    return batch
+
+
+@pytest.fixture(scope="module")
+def built():
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = registry.smoke_config(arch)
+            model = lm.build(cfg)
+            params = model.init(jax.random.PRNGKey(0))
+            cache[arch] = (cfg, model, params)
+        return cache[arch]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_loss_finite(built, arch):
+    cfg, model, params = built(arch)
+    batch = make_batch(cfg)
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert jnp.isfinite(loss), arch
+    assert float(loss) > 0
+    assert jnp.isfinite(metrics["ce"])
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_grads_finite_and_nonzero(built, arch):
+    cfg, model, params = built(arch)
+    batch = make_batch(cfg)
+    grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    leaves = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in leaves), arch
+    total = sum(float(jnp.sum(jnp.abs(g))) for g in leaves)
+    assert total > 0, arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_shapes(built, arch):
+    cfg, model, params = built(arch)
+    B, S, ML = 2, 8, 16
+    batch = make_batch(cfg, B, S)
+    logits, caches = model.prefill(params, batch, ML)
+    assert logits.shape == (B, cfg.vocab)
+    assert int(caches["len"]) == S
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    logits2, caches = model.decode(params, caches, tok)
+    assert logits2.shape == (B, cfg.vocab)
+    assert bool(jnp.isfinite(logits2).all()), arch
+    assert int(caches["len"]) == S + 1
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_full_forward(built, arch):
+    """Incremental decode must reproduce teacher-forced logits: run prefill
+    on s tokens + decode token s, compare with prefill on s+1 tokens.
+
+    MoE archs: capacity-based routing drops depend on the token GROUP, so
+    the invariant only holds exactly under no-drop capacity — rebuild with a
+    large capacity factor (standard practice for this equivalence check)."""
+    cfg, model, params = built(arch)
+    if cfg.is_moe:
+        cfg = dataclasses.replace(cfg, capacity_factor=16.0)
+        model = lm.build(cfg)
+    B, S = 2, 8
+    batch = make_batch(cfg, B, S + 1, seed=1)
+    toks = batch["tokens"]
+    b1 = dict(batch, tokens=toks[:, :S])
+    _, caches = model.prefill(params, b1, S + 4)
+    logits_inc, _ = model.decode(params, caches, toks[:, S])
+    b2 = dict(batch, tokens=toks)
+    logits_full, _ = model.prefill(params, b2, S + 4)
+    atol = 1e-3 if cfg.dtype == "float32" else 5e-2
+    np.testing.assert_allclose(np.asarray(logits_inc),
+                               np.asarray(logits_full), atol=atol,
+                               rtol=1e-2)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    """Exact published numbers from the assignment table."""
+    spec = {
+        "mixtral-8x7b": (32, 4096, 32, 8, 32000),
+        "deepseek-v3-671b": (61, 7168, 128, 128, 129280),
+        "deepseek-coder-33b": (62, 7168, 56, 8, 32256),
+        "gemma-7b": (28, 3072, 16, 16, 256000),
+        "minitron-8b": (32, 4096, 32, 8, 256000),
+        "llama3-8b": (32, 4096, 32, 8, 128256),
+        "zamba2-7b": (81, 3584, 32, 32, 32000),
+        "rwkv6-1.6b": (24, 2048, 32, 32, 65536),
+        "llama-3.2-vision-90b": (100, 8192, 64, 8, 128256),
+        "whisper-base": (6, 512, 8, 8, 51865),
+    }[arch]
+    cfg = registry.config(arch)
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.vocab)
+    assert got == spec, (arch, got, spec)
+
+
+def test_param_counts_plausible():
+    """param_count() must land near the advertised sizes."""
+    expect = {"llama3-8b": (8.0e9, 0.15), "mixtral-8x7b": (46.7e9, 0.15),
+              "deepseek-v3-671b": (671e9, 0.15), "gemma-7b": (8.5e9, 0.20),
+              "rwkv6-1.6b": (1.6e9, 0.25), "deepseek-coder-33b": (33e9, 0.15),
+              "minitron-8b": (8.0e9, 0.35),  # 256k vocab dominates
+              "zamba2-7b": (7.0e9, 0.35)}
+    for arch, (n, tol) in expect.items():
+        got = registry.config(arch).param_count()
+        assert abs(got - n) / n < tol, (arch, got, n)
+
+
+def test_moe_active_params():
+    cfg = registry.config("mixtral-8x7b")
+    full, active = cfg.param_count(), cfg.active_param_count()
+    assert active < full
+    # mixtral: ~13B active of ~47B
+    assert 0.2 < active / full < 0.4
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_same_family_as_full(built, arch):
+    cfg_full = registry.config(arch)
+    cfg_smoke = registry.smoke_config(arch)
+    assert cfg_smoke.family == cfg_full.family
+    assert cfg_smoke.is_moe == cfg_full.is_moe
+    assert cfg_smoke.rwkv == cfg_full.rwkv
+    assert cfg_smoke.enc_dec == cfg_full.enc_dec
+    assert bool(cfg_smoke.ssm_state) == bool(cfg_full.ssm_state)
+    assert bool(cfg_smoke.cross_attn_every) == bool(cfg_full.cross_attn_every)
+
+
+def test_long_500k_only_subquadratic():
+    for arch in ARCHS:
+        shapes = registry.shapes_for(arch)
+        if "long_500k" in shapes:
+            assert arch in ("rwkv6-1.6b", "zamba2-7b"), arch
+
+
+def test_moe_capacity_drops_renormalize(built):
+    """Capacity overflow must not produce NaNs or unbounded outputs."""
+    cfg, model, params = built("mixtral-8x7b")
+    cfg2 = dataclasses.replace(cfg, capacity_factor=0.25)   # force drops
+    model2 = lm.build(cfg2)
+    batch = make_batch(cfg2, 2, 16)
+    loss, _ = model2.loss(params, batch)
+    assert jnp.isfinite(loss)

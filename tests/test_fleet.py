@@ -1,0 +1,124 @@
+"""Beyond-paper fleet scheduler: TOPSIS over heterogeneous TPU slices with
+roofline-derived criteria."""
+import numpy as np
+import pytest
+
+from repro.launch import fleet
+
+
+def mk_job(chips=256, comp=1.0, mem=2.0, coll=0.5, peak=8e9,
+           arch="llama3-8b", shape="train_4k"):
+    return fleet.Job(arch, shape, chips, comp, mem, coll, peak)
+
+
+def mk_fleet():
+    return [fleet.Slice("e0", 256, 256, "v5e"),
+            fleet.Slice("p0", 256, 256, "v5p"),
+            fleet.Slice("v0", 256, 256, "v4")]
+
+
+def test_feasibility_chips_and_hbm():
+    job = mk_job(chips=256, peak=8e9)
+    assert fleet.feasible(job, fleet.Slice("s", 256, 256, "v5e"))
+    assert not fleet.feasible(job, fleet.Slice("s", 256, 128, "v5e"))
+    # 20 GB/chip peak: too big for v5e (16 GB), fits v5p (95 GB)
+    big = mk_job(peak=20e9)
+    assert not fleet.feasible(big, fleet.Slice("s", 256, 256, "v5e"))
+    assert fleet.feasible(big, fleet.Slice("s", 256, 256, "v5p"))
+
+
+def test_job_on_slice_physics():
+    job = mk_job(comp=1.0, mem=2.0, coll=0.5)
+    e = fleet.Slice("e", 256, 256, "v5e", awake=True)
+    p = fleet.Slice("p", 256, 256, "v5p", awake=True)
+    step_e, en_e = fleet.job_on_slice(job, e)
+    step_p, en_p = fleet.job_on_slice(job, p)
+    assert step_p < step_e                       # v5p is faster
+    assert en_p > en_e * 0.5                     # but not proportionally frugal
+    # waking an idle slice costs extra energy
+    e_idle = fleet.Slice("e2", 256, 256, "v5e", awake=False)
+    _, en_wake = fleet.job_on_slice(job, e_idle)
+    assert en_wake > en_e
+
+
+def test_energy_vs_performance_scheme_preference():
+    """Energy-centric prefers the frugal v5e; performance-centric the fast
+    v5p — the TPU analog of paper §V.D (class A vs class C allocation).
+    The job fits all generations comfortably (peak 2 GB/chip), like the
+    paper's pods on class-A nodes."""
+    job = mk_job(peak=2e9)
+    ie, _ = fleet.place(job, mk_fleet(), "energy_centric")
+    ip, _ = fleet.place(job, mk_fleet(), "performance_centric")
+    assert mk_fleet()[ie].gen == "v5e"
+    assert mk_fleet()[ip].gen == "v5p"
+
+
+def test_hbm_tight_job_resource_efficient_moves_off():
+    """A job that nearly fills v5e HBM: resource-efficient weighting (high
+    availability emphasis) moves off the tight slice; energy-centric may
+    still take it (it fits). Paper §V.C: high contention needs hybrid
+    resource-aware profiles."""
+    job = mk_job(peak=15e9)
+    ir, _ = fleet.place(job, mk_fleet(), "resource_efficient")
+    assert mk_fleet()[ir].gen != "v5e"
+    ie, _ = fleet.place(job, mk_fleet(), "energy_centric")
+    assert ie is not None    # still schedulable
+
+
+def test_consolidation_prefers_awake_slice():
+    job = mk_job(chips=64)
+    slices = [fleet.Slice("a", 256, 256, "v5e", awake=False),
+              fleet.Slice("b", 256, 192, "v5e", awake=True)]
+    idx, _ = fleet.place(job, slices, "energy_centric")
+    assert slices[idx].awake
+
+
+def test_place_avoids_degraded_slice():
+    job = mk_job()
+    slices = [fleet.Slice("a", 256, 256, "v5e"),
+              fleet.Slice("b", 256, 256, "v5e")]
+    slices[0].degrade(10.0)
+    idx, _ = fleet.place(job, slices)
+    assert idx == 1
+
+
+def test_replace_slice_moves_away():
+    job = mk_job()
+    slices = mk_fleet()
+    cur, _ = fleet.place(job, slices)
+    new = fleet.replace_slice(job, slices, current=cur)
+    assert slices[cur].health > 1.0
+    assert new != cur
+
+
+def test_schedule_queue_accounts_chips():
+    jobs = [mk_job() for _ in range(3)]
+    slices = mk_fleet()            # 3 x 256 chips
+    placed = fleet.schedule_queue(jobs, slices)
+    assert all(idx is not None for _, idx in placed)
+    assert sum(s.free_chips for s in slices) == 0
+    idx, diag = fleet.place(mk_job(), slices)
+    assert idx is None and diag["reason"] == "unschedulable"
+
+
+def test_unschedulable_when_hbm_everywhere_too_small():
+    job = mk_job(peak=200e9)
+    idx, _ = fleet.place(job, mk_fleet())
+    assert idx is None
+
+
+def test_load_jobs_from_dryrun(tmp_path):
+    import json
+    rec = {"arch": "llama3-8b", "shape": "train_4k", "mesh": "single",
+           "chips": 256, "ok": True,
+           "roofline": {"compute_s": 1.0, "memory_s": 2.0,
+                        "collective_s": 0.5, "dominant": "memory_s"},
+           "memory": {"peak_bytes": 8e9}}
+    (tmp_path / "llama3-8b__train_4k__single.json").write_text(
+        json.dumps(rec))
+    (tmp_path / "bad__x__single.json").write_text(json.dumps(
+        {"ok": False, "arch": "x", "shape": "y"}))
+    jobs = fleet.load_jobs(str(tmp_path))
+    assert len(jobs) == 1
+    assert jobs[0].step_time_s == 2.0
+    assert jobs[0].utilization() == pytest.approx(0.5)

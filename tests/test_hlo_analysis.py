@@ -1,0 +1,160 @@
+"""HLO roofline analyzer: trip-count-aware flops/bytes/collectives.
+
+Programs are compiled in-process on the single real CPU device (trip-count
+handling is device-count independent); the multi-device collective path is
+covered by tests/test_dryrun.py via a subprocess with forced devices.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_analysis as H
+
+
+def compiled_text(f, *args):
+    return jax.jit(f).lower(*args).compile().as_text()
+
+
+def test_plain_matmul_flops_exact():
+    a = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 64), jnp.float32)
+    txt = compiled_text(lambda x, y: x @ y, a, b)
+    r = H.analyze(txt)
+    assert r["flops_per_dev"] == pytest.approx(2 * 128 * 256 * 64, rel=0.01)
+    # bytes: read a (128k) + read b (64k) + write out (32k)
+    want_bytes = 4 * (128 * 256 + 256 * 64 + 128 * 64)
+    assert r["bytes_per_dev"] == pytest.approx(want_bytes, rel=0.2)
+
+
+def test_scan_multiplies_by_trip_count():
+    def f(ws, x):
+        def body(x, w):
+            return jnp.tanh(x @ w), ()
+        x, _ = jax.lax.scan(body, x, ws)
+        return x
+
+    ws = jax.ShapeDtypeStruct((12, 64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+    txt = compiled_text(f, ws, x)
+    r = H.analyze(txt)
+    want = 12 * 2 * 8 * 64 * 64
+    assert r["flops_per_dev"] == pytest.approx(want, rel=0.05)
+    # XLA's own cost analysis counts the body ONCE — our analyzer must not
+    xla = jax.jit(f).lower(ws, x).compile().cost_analysis()["flops"]
+    assert r["flops_per_dev"] > 5 * xla
+
+
+def test_nested_scan_trip_product():
+    def f(ws, x):
+        def outer(x, w):
+            def inner(x, _):
+                return jnp.tanh(x @ w), ()
+            x, _ = jax.lax.scan(inner, x, None, length=5)
+            return x, ()
+        x, _ = jax.lax.scan(outer, x, ws)
+        return x
+
+    ws = jax.ShapeDtypeStruct((3, 32, 32), jnp.float32)
+    x = jax.ShapeDtypeStruct((4, 32), jnp.float32)
+    r = H.analyze(compiled_text(f, ws, x))
+    want = 3 * 5 * 2 * 4 * 32 * 32
+    assert r["flops_per_dev"] == pytest.approx(want, rel=0.05)
+
+
+def test_remat_recompute_is_visible():
+    """jax.checkpoint adds recompute flops that the analyzer must count."""
+    def loss(w, x):
+        def block(x):
+            return jnp.tanh(x @ w)
+        h = jax.checkpoint(block)(x)
+        return jnp.sum(h * h)
+
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    plain = H.analyze(compiled_text(lambda w, x: jax.grad(
+        lambda w: jnp.sum(jnp.tanh(x @ w) ** 2))(w), w, x))
+    # same but no checkpoint wrapper
+    def loss2(w, x):
+        h = jnp.tanh(x @ w)
+        return jnp.sum(h * h)
+    base = H.analyze(compiled_text(
+        lambda w, x: jax.grad(lambda w: loss2(w, x))(w), w, x))
+    assert plain["flops_per_dev"] >= base["flops_per_dev"] * 0.9
+
+
+def test_dynamic_slice_bytes_not_full_operand():
+    """Reading 1 row of a big table must cost ~row bytes, not table bytes."""
+    table = jax.ShapeDtypeStruct((4096, 512), jnp.float32)
+    idx = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def f(t, i):
+        return jax.lax.dynamic_slice_in_dim(t, i, 1, 0) * 2.0
+
+    r = H.analyze(compiled_text(f, table, idx))
+    assert r["bytes_per_dev"] < 4096 * 512 * 4 / 10
+
+
+def test_parse_tuple_result_with_index_comments():
+    """Regression: /*index=N*/ comments inside tuple types broke parsing."""
+    hlo = """
+HloModule test
+%body (p: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %p = (s32[], f32[4]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[4]{0} get-tuple-element(%p), index=1
+  %c = s32[] constant(1)
+  %ni = s32[] add(%i, %c)
+  %nx = f32[4]{0} add(%x, %x)
+  ROOT %t = (s32[], /*index=1*/f32[4]{0}) tuple(%ni, %nx)
+}
+%cond (p: (s32[], f32[4])) -> pred[] {
+  %p = (s32[], f32[4]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+ENTRY %main (a: f32[4]) -> f32[4] {
+  %a = f32[4]{0} parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[4]{0}) tuple(%z, %a)
+  %w = (s32[], /*index=1*/f32[4]{0}) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"7"}}
+  ROOT %out = f32[4]{0} get-tuple-element(%w), index=1
+}
+"""
+    r = H.analyze(hlo)
+    # 7 iterations x (body: f32[4] add + s32 add = 5 flops; cond: compare = 1)
+    assert r["flops_per_dev"] == 7 * 6
+
+
+def test_collective_formulas():
+    hlo = """
+HloModule test
+%sum (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+ENTRY %main (x: f32[1024]) -> f32[1024] {
+  %x = f32[1024]{0} parameter(0)
+  %ar = f32[1024]{0} all-reduce(%x), replica_groups=[2,8]<=[16], to_apply=%sum
+  ROOT %ag = f32[1024]{0} all-gather(%ar), replica_groups=[4,4]<=[16], dimensions={0}
+}
+"""
+    r = H.analyze(hlo)
+    c = r["collectives"]
+    assert c["all-reduce"]["count"] == 1
+    np.testing.assert_allclose(c["all-reduce"]["bytes"],
+                               2 * 7 / 8 * 1024 * 4)
+    np.testing.assert_allclose(c["all-gather"]["bytes"], 3 / 4 * 1024 * 4)
+
+
+def test_top_contributors_ranks_dot_first():
+    def f(x, w):
+        return jnp.sum(jnp.tanh(x @ w))
+
+    x = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+    w = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+    txt = compiled_text(f, x, w)
+    top = H.top_contributors(txt, 3, "flops")
+    assert "dot" in top[0][0] or top[0][1][0] > 1e7

@@ -1,0 +1,95 @@
+"""Cluster simulator: reproduces the paper's factorial experiment trends."""
+import numpy as np
+import pytest
+
+from repro.cluster.simulator import run_experiment, table6
+
+# Paper Table VI optimization percentages.
+PAPER_TABLE6 = {
+    ("low", "general"): 8.93, ("low", "energy_centric"): 37.96,
+    ("low", "performance_centric"): 2.22, ("low", "resource_efficient"): 26.80,
+    ("medium", "general"): 16.57, ("medium", "energy_centric"): 39.13,
+    ("medium", "performance_centric"): 7.72,
+    ("medium", "resource_efficient"): 32.70,
+    ("high", "general"): 13.50, ("high", "energy_centric"): 33.82,
+    ("high", "performance_centric"): 8.29,
+    ("high", "resource_efficient"): 4.86,
+}
+
+
+@pytest.fixture(scope="module")
+def t6():
+    return table6()
+
+
+def test_all_pods_scheduled():
+    for level in ("low", "medium", "high"):
+        res = run_experiment(level, "energy_centric")
+        assert res.unschedulable == 0
+        n_expected = {"low": 8, "medium": 14, "high": 22}[level]
+        assert len(res.records) == n_expected
+
+
+def test_energy_accounting_positive(t6):
+    for level, d in t6.items():
+        for scheme, v in d.items():
+            assert v["default_kj"] > 0 and v["topsis_kj"] > 0
+
+
+def test_energy_centric_beats_default_everywhere(t6):
+    """Headline claim: energy-centric TOPSIS saves energy at every
+    competition level (37.96/39.13/33.82 % in the paper)."""
+    for level in ("low", "medium", "high"):
+        assert t6[level]["energy_centric"]["optimization_pct"] > 20
+
+
+def test_energy_centric_is_best_profile(t6):
+    for level in ("low", "medium", "high"):
+        e = t6[level]["energy_centric"]["optimization_pct"]
+        for scheme, v in t6[level].items():
+            assert e >= v["optimization_pct"] - 1e-9
+
+
+def test_performance_centric_is_worst_profile(t6):
+    """Paper §V.B: performance-centric has the lowest savings everywhere."""
+    for level in ("low", "medium", "high"):
+        p = t6[level]["performance_centric"]["optimization_pct"]
+        for scheme, v in t6[level].items():
+            assert p <= v["optimization_pct"] + 1e-9
+
+
+def test_medium_competition_is_sweet_spot(t6):
+    """Paper §V.C: medium competition gives the best average optimization."""
+    avg = {lvl: np.mean([v["optimization_pct"] for v in d.values()])
+           for lvl, d in t6.items()}
+    assert avg["medium"] > avg["low"]
+    assert avg["medium"] > avg["high"]
+
+
+def test_matches_paper_energy_centric_within_tolerance(t6):
+    """Quantitative match of the headline numbers (calibrated default
+    column; TOPSIS column is a prediction — see EXPERIMENTS.md §Repro)."""
+    for level in ("low", "medium", "high"):
+        ours = t6[level]["energy_centric"]["optimization_pct"]
+        paper = PAPER_TABLE6[(level, "energy_centric")]
+        assert abs(ours - paper) < 8.0, (level, ours, paper)
+
+
+def test_energy_centric_allocates_to_class_a():
+    """Paper §V.D: energy-centric prefers category-A (frugal) nodes."""
+    res = run_experiment("medium", "energy_centric")
+    alloc = res.allocation("topsis")
+    assert alloc.get("A", 0) >= max(alloc.values()) - 1
+
+
+def test_scheduling_overhead_small():
+    """Paper: 'minimal scheduling overhead' — TOPSIS adds < 5 ms/pod here."""
+    res = run_experiment("high", "energy_centric")
+    assert res.mean_sched_time_ms("topsis") < 5.0
+
+
+def test_deterministic():
+    a = run_experiment("medium", "general")
+    b = run_experiment("medium", "general")
+    assert [r.node for r in a.records] == [r.node for r in b.records]
+    assert a.energy_kj("topsis") == b.energy_kj("topsis")

@@ -1,0 +1,150 @@
+"""TOPSIS engine: unit + property tests (paper's core contribution)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core.topsis import (closeness, closeness_np, normalize_matrix,
+                               ideal_points, select)
+
+BENEFIT5 = np.array([False, False, True, True, True])  # paper's 5 criteria
+
+
+def rand_matrix(n, c, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.uniform(0.1, 10.0, (n, c))
+
+
+# --- unit: hand-checked example -------------------------------------------------
+def test_known_example():
+    # 2 alternatives, 1 benefit criterion: higher value must win
+    M = np.array([[1.0], [3.0]])
+    r = closeness_np(M, np.array([1.0]), np.array([True]))
+    assert r.ranking[0] == 1
+    assert r.closeness[1] > r.closeness[0]
+    # cost criterion flips it
+    r = closeness_np(M, np.array([1.0]), np.array([False]))
+    assert r.ranking[0] == 0
+
+
+def test_ideal_points_directions():
+    M = jnp.asarray(rand_matrix(6, 5))
+    v = normalize_matrix(M)
+    a_pos, a_neg = ideal_points(v, jnp.asarray(BENEFIT5))
+    # benefit columns: ideal is max; cost columns: ideal is min
+    np.testing.assert_allclose(a_pos[2:], v[:, 2:].max(0), rtol=1e-6)
+    np.testing.assert_allclose(a_pos[:2], v[:, :2].min(0), rtol=1e-6)
+    np.testing.assert_allclose(a_neg[2:], v[:, 2:].min(0), rtol=1e-6)
+    np.testing.assert_allclose(a_neg[:2], v[:, :2].max(0), rtol=1e-6)
+
+
+# --- property tests --------------------------------------------------------------
+@settings(max_examples=200, deadline=None)
+@given(hnp.arrays(np.float64, hnp.array_shapes(min_dims=2, max_dims=2,
+                                               min_side=2, max_side=32),
+                  elements=st.floats(0.01, 1e4)),
+       st.integers(0, 2 ** 31 - 1))
+def test_closeness_in_unit_interval(M, wseed):
+    c = M.shape[1]
+    rng = np.random.default_rng(wseed)
+    w = rng.uniform(0.01, 1.0, c)
+    benefit = rng.uniform(size=c) < 0.5
+    r = closeness_np(M, w, benefit)
+    assert np.all(r.closeness >= -1e-12) and np.all(r.closeness <= 1 + 1e-12)
+    assert np.all(np.isfinite(r.closeness))
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(2, 40), st.integers(1, 8),
+       st.integers(0, 2 ** 31 - 1))
+def test_jnp_np_equivalence(n, c, seed):
+    rng = np.random.default_rng(seed)
+    M = rng.uniform(0.01, 100.0, (n, c))
+    w = rng.uniform(0.01, 1.0, c)
+    benefit = rng.uniform(size=c) < 0.5
+    r_np = closeness_np(M, w, benefit)
+    r_j = closeness(jnp.asarray(M), jnp.asarray(w), jnp.asarray(benefit))
+    np.testing.assert_allclose(r_np.closeness, np.asarray(r_j.closeness),
+                               atol=1e-5)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(2, 20), st.integers(0, 2 ** 31 - 1),
+       st.floats(0.1, 100.0))
+def test_scale_invariance(n, seed, scale):
+    """Multiplying a criterion column by a positive constant must not change
+    the ranking (vector normalization property)."""
+    rng = np.random.default_rng(seed)
+    M = rng.uniform(0.1, 10.0, (n, 5))
+    w = rng.uniform(0.1, 1.0, 5)
+    r1 = closeness_np(M, w, BENEFIT5)
+    M2 = M.copy()
+    M2[:, 3] *= scale
+    r2 = closeness_np(M2, w, BENEFIT5)
+    np.testing.assert_allclose(r1.closeness, r2.closeness, atol=1e-8)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(2, 20), st.integers(0, 2 ** 31 - 1))
+def test_dominant_alternative_wins(n, seed):
+    """An alternative strictly better on every criterion must rank first."""
+    rng = np.random.default_rng(seed)
+    M = rng.uniform(1.0, 5.0, (n, 5))
+    M[0, :2] = 0.5          # strictly lowest cost
+    M[0, 2:] = 6.0          # strictly highest benefit
+    w = rng.uniform(0.1, 1.0, 5)
+    r = closeness_np(M, w, BENEFIT5)
+    assert r.ranking[0] == 0
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(2, 16), st.integers(0, 2 ** 31 - 1))
+def test_permutation_equivariance(n, seed):
+    rng = np.random.default_rng(seed)
+    M = rng.uniform(0.1, 10.0, (n, 5))
+    w = rng.uniform(0.1, 1.0, 5)
+    perm = rng.permutation(n)
+    r1 = closeness_np(M, w, BENEFIT5)
+    r2 = closeness_np(M[perm], w, BENEFIT5)
+    np.testing.assert_allclose(r1.closeness[perm], r2.closeness, atol=1e-9)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(3, 16), st.integers(0, 2 ** 31 - 1))
+def test_invalid_rows_never_selected(n, seed):
+    rng = np.random.default_rng(seed)
+    M = rng.uniform(0.1, 10.0, (n, 5))
+    w = rng.uniform(0.1, 1.0, 5)
+    valid = rng.uniform(size=n) < 0.5
+    valid[rng.integers(n)] = True          # at least one feasible
+    r = closeness_np(M, w, BENEFIT5, valid=valid)
+    assert valid[r.ranking[0]]
+    assert np.all(np.isneginf(r.closeness[~valid]))
+
+
+def test_weight_shift_changes_winner():
+    """Putting all weight on a criterion makes its best alternative win."""
+    M = np.array([
+        [1.0, 5.0, 1.0, 1.0, 1.0],     # cheapest on criterion 0 (cost)
+        [5.0, 1.0, 1.0, 1.0, 1.0],     # cheapest on criterion 1 (cost)
+    ])
+    w0 = np.array([1.0, 1e-9, 1e-9, 1e-9, 1e-9])
+    w1 = np.array([1e-9, 1.0, 1e-9, 1e-9, 1e-9])
+    assert closeness_np(M, w0, BENEFIT5).ranking[0] == 0
+    assert closeness_np(M, w1, BENEFIT5).ranking[0] == 1
+
+
+def test_degenerate_all_equal():
+    M = np.ones((4, 5))
+    r = closeness_np(M, np.ones(5), BENEFIT5)
+    assert np.all(np.isfinite(r.closeness))
+    np.testing.assert_allclose(r.closeness, 0.5, atol=1e-9)
+
+
+def test_select_jit():
+    M = jnp.asarray(rand_matrix(8, 5, 1))
+    w = jnp.ones(5)
+    i = jax.jit(select)(M, w, jnp.asarray(BENEFIT5))
+    assert 0 <= int(i) < 8
