@@ -1,60 +1,131 @@
-"""Paper §IV.C 'Scheduling Time (ms)': TOPSIS decision latency.
+"""Paper §IV.C 'Scheduling Time (ms)' at fleet scale.
 
-The paper's cluster has 4 nodes; a production fleet has thousands. We sweep
-N = 4 .. 4096 candidate nodes and time three backends:
+The paper's cluster has 4 nodes; a production fleet has thousands. This
+benchmark sweeps N candidate nodes and times the scheduling engines two
+ways:
 
-  numpy    — the per-pod hot path used by the cluster scheduler
-  jax-jit  — the jittable engine (fleet batch scoring on accelerators)
-  kernel   — the Pallas TOPSIS kernel (interpret mode on CPU; compiles to
-             Mosaic on a real TPU)
+  per-pod   — GreenPodScheduler.select in a Python loop over the queue
+              (numpy backend: the latency path, one rescore per bind)
+  batched   — BatchScheduler.select_many: one scoring pass for the whole
+              queue on a backend:
+                numpy   per-pod closeness_np loop (reference)
+                jax     topsis.batched_closeness (vmap + jit)
+                pallas  the tiled TOPSIS kernel (interpret mode on CPU;
+                        compiles to Mosaic on a real TPU)
 
-Also times the DEFAULT K8s scheduler's python scoring for reference.
+Every batched backend's closeness matrix is asserted against
+``topsis.closeness_np`` within 1e-5 before timing. Results are printed as
+CSV and written to BENCH_scheduling.json.
+
+Run: PYTHONPATH=src python benchmarks/scheduling_time.py \
+        [--backend all|numpy|jax|pallas] [--nodes 4,256,2048,8192] \
+        [--pods 64] [--out BENCH_scheduling.json]
 """
 from __future__ import annotations
 
+import argparse
+import itertools
+import json
 import time
 
-import jax
 import numpy as np
 
-from repro.core import topsis
-from repro.core.criteria import benefit_mask
-from repro.kernels import ops
+from repro.core.scheduler import BACKENDS, BatchScheduler, GreenPodScheduler
+from repro.cluster.node import make_fleet
+from repro.cluster.workload import WORKLOADS, Pod
+
+DEFAULT_NODES = (4, 256, 2048, 8192)
 
 
-def _time(f, *args, reps=30, warmup=3):
+def _time(f, reps=10, warmup=2):
     for _ in range(warmup):
-        f(*args)
+        f()
     t0 = time.perf_counter()
     for _ in range(reps):
-        f(*args)
+        f()
     return (time.perf_counter() - t0) / reps
 
 
-def run(csv: bool = True):
-    rng = np.random.default_rng(0)
-    benefit = benefit_mask()
-    w = np.full(5, 0.2)
-    print("backend,n_nodes,us_per_decision")
-    results = {}
-    for n in (4, 16, 64, 256, 1024, 4096):
-        M = rng.uniform(0.1, 10.0, (n, 5))
-        t_np = _time(lambda: topsis.closeness_np(M, w, benefit))
-        Mj = jax.numpy.asarray(M)
-        wj = jax.numpy.asarray(w)
-        bj = jax.numpy.asarray(benefit)
-        vj = jax.numpy.ones((n,), bool)
-        jf = jax.jit(lambda M, w, b, v:
-                     topsis.closeness(M, w, b, v).closeness)
-        t_jit = _time(lambda: jf(Mj, wj, bj, vj).block_until_ready())
-        kf = jax.jit(lambda M, w, b: ops.topsis_closeness(M, w, b))
-        t_k = _time(lambda: kf(Mj, wj, bj).block_until_ready(), reps=10)
-        for name, t in (("numpy", t_np), ("jax-jit", t_jit),
-                        ("pallas-interpret", t_k)):
-            print(f"{name},{n},{t * 1e6:.1f}")
-            results[(name, n)] = t * 1e6
-    return results
+def make_queue(n_pods: int) -> list[Pod]:
+    kinds = itertools.cycle(["light", "medium", "complex"])
+    return [Pod(i, WORKLOADS[next(kinds)], "topsis") for i in range(n_pods)]
+
+
+def verify_backend(backend: str, pods, table, want, atol=1e-5) -> float:
+    """Max |closeness - want| over the queue's feasible entries, where
+    ``want`` is the numpy-reference score matrix for the same snapshot."""
+    if backend == "numpy":
+        return 0.0          # `want` IS the numpy backend's output
+    got = BatchScheduler("energy_centric",
+                         backend=backend).score_queue(pods, table)
+    finite = np.isfinite(want)
+    assert np.array_equal(finite, np.isfinite(got)), \
+        f"{backend}: feasibility masks differ"
+    err = float(np.max(np.abs(got[finite] - want[finite]))) \
+        if finite.any() else 0.0
+    assert err < atol, f"{backend}: max closeness err {err:.2e} >= {atol}"
+    return err
+
+
+def run(backends=BACKENDS, node_counts=DEFAULT_NODES, n_pods: int = 64,
+        reps: int = 10, out: str | None = "BENCH_scheduling.json",
+        seed: int = 0) -> dict:
+    pods = make_queue(n_pods)
+    results = []
+    print("mode,backend,n_nodes,pods,ms_total,us_per_pod")
+    for n in node_counts:
+        table = make_fleet(n, seed=seed, utilization=0.3)
+        # the per-pod latency baseline: P independent select() calls
+        g = GreenPodScheduler("energy_centric", backend="numpy")
+        t = _time(lambda: [g.select(p, table) for p in pods], reps=reps)
+        per_pod_ms = t * 1e3
+        results.append({"mode": "per-pod", "backend": "numpy",
+                        "n_nodes": n, "pods": n_pods,
+                        "ms_total": t * 1e3,
+                        "us_per_pod": t / n_pods * 1e6})
+        print(f"per-pod,numpy,{n},{n_pods},{t * 1e3:.3f},"
+              f"{t / n_pods * 1e6:.1f}")
+        want = BatchScheduler("energy_centric",
+                              backend="numpy").score_queue(pods, table)
+        for backend in backends:
+            err = verify_backend(backend, pods, table, want)
+            s = BatchScheduler("energy_centric", backend=backend)
+            t = _time(lambda: s.select_many(pods, table), reps=reps)
+            rec = {"mode": "batched", "backend": backend, "n_nodes": n,
+                   "pods": n_pods, "ms_total": t * 1e3,
+                   "us_per_pod": t / n_pods * 1e6,
+                   "max_closeness_err_vs_numpy": err,
+                   "speedup_vs_per_pod_numpy": per_pod_ms / (t * 1e3)}
+            results.append(rec)
+            print(f"batched,{backend},{n},{n_pods},{t * 1e3:.3f},"
+                  f"{t / n_pods * 1e6:.1f}")
+    report = {"bench": "scheduling_time",
+              "config": {"pods": n_pods, "reps": reps, "seed": seed,
+                         "node_counts": list(node_counts),
+                         "backends": list(backends)},
+              "results": results}
+    if out:
+        with open(out, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"wrote {out}")
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="all",
+                    help="all | " + " | ".join(BACKENDS))
+    ap.add_argument("--nodes", default=",".join(map(str, DEFAULT_NODES)),
+                    help="comma-separated fleet sizes to sweep")
+    ap.add_argument("--pods", type=int, default=64)
+    ap.add_argument("--reps", type=int, default=10)
+    ap.add_argument("--out", default="BENCH_scheduling.json")
+    args = ap.parse_args()
+    backends = BACKENDS if args.backend == "all" else (args.backend,)
+    node_counts = tuple(int(x) for x in args.nodes.split(",") if x)
+    run(backends=backends, node_counts=node_counts, n_pods=args.pods,
+        reps=args.reps, out=args.out)
 
 
 if __name__ == "__main__":
-    run()
+    main()

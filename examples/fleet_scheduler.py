@@ -50,3 +50,29 @@ print(f"\njob {job.arch}/{job.shape} initially on {slices[cur].name}")
 new = fleet.replace_slice(job, slices, cur, "energy_centric")
 print(f"straggler alert -> degraded {slices[cur].name} (health "
       f"{slices[cur].health:.1f}x), re-placed on {slices[new].name}")
+
+# --- fleet-scale batched scheduling ---------------------------------------------
+# The paper's cluster has 4 nodes; the batched engine scores a whole queue
+# of pods against thousands of candidate nodes in one TOPSIS pass
+# (BatchScheduler.select_many — numpy for reference, jax/pallas for
+# throughput; see benchmarks/scheduling_time.py for the full sweep).
+import time
+
+from repro.core.scheduler import BatchScheduler
+from repro.cluster.node import make_fleet
+from repro.cluster.workload import WORKLOADS, Pod
+
+N_NODES, N_PODS = 2048, 64
+table = make_fleet(N_NODES, seed=0, utilization=0.3)
+queue = [Pod(i, WORKLOADS[("light", "medium", "complex")[i % 3]], "topsis")
+         for i in range(N_PODS)]
+print(f"\n--- batched fleet scheduling: {N_PODS} pods x {N_NODES} nodes")
+for backend in ("numpy", "jax"):
+    sched = BatchScheduler("energy_centric", backend=backend)
+    sched.select_many(queue, table)            # warm up (jit compile)
+    t0 = time.perf_counter()
+    assignments, diag = sched.select_many(queue, table)
+    dt = time.perf_counter() - t0
+    placed = sum(a is not None for a in assignments)
+    print(f"  {backend:6s}: {placed}/{N_PODS} placed in {dt * 1e3:7.2f} ms "
+          f"({diag['per_pod_time_s'] * 1e6:.0f} us/pod)")

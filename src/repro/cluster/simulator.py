@@ -11,7 +11,8 @@ from typing import Callable
 import numpy as np
 
 from repro.core.energy import NODE_ENERGY_PROFILES, task_energy_joules
-from repro.core.scheduler import DefaultK8sScheduler, GreenPodScheduler, predict_exec_time
+from repro.core.scheduler import (BatchScheduler, DefaultK8sScheduler,
+                                  GreenPodScheduler, predict_exec_time)
 from repro.cluster.node import Node, make_paper_cluster
 from repro.cluster.workload import Pod, make_pods
 
@@ -90,18 +91,61 @@ class SimResult:
         return out
 
 
+def _commit(pod: Pod, idx: int, nodes: list[Node], t: float,
+            sched_time_s: float, records: list[PodRecord],
+            running: list) -> None:
+    """Bind pod to nodes[idx] and append its record + completion event."""
+    node = nodes[idx]
+    node.bind(pod.cpu, pod.mem)
+    rt = predict_exec_time(pod, node)
+    ej = task_energy_joules(node.node_class, rt, pod.cpu)
+    records.append(PodRecord(pod, node.name, node.node_class, t, rt,
+                             ej, sched_time_s))
+    heapq.heappush(running, (t + rt, pod.uid, pod, idx))
+
+
+def run_burst(pods: list[Pod], nodes: list[Node], sched: BatchScheduler,
+              t: float, records: list[PodRecord],
+              running: list) -> tuple[list[Pod], bool]:
+    """Schedule an arrival burst through one batched scoring pass
+    (``BatchScheduler.select_many``) and commit the assignments. Returns
+    (pods that did not fit, whether any placement was made)."""
+    assignments, diag = sched.select_many(pods, nodes)
+    still: list[Pod] = []
+    progress = False
+    for pod, idx in zip(pods, assignments):
+        if idx is None:
+            still.append(pod)
+            continue
+        _commit(pod, idx, nodes, t, diag["per_pod_time_s"], records, running)
+        progress = True
+    return still, progress
+
+
 def run_experiment(level: str, scheme: str,
                    cluster_factory: Callable[[], list[Node]] = make_paper_cluster,
-                   adaptive: bool = False) -> SimResult:
+                   adaptive: bool = False, batch: bool = False,
+                   batch_backend: str = "jax") -> SimResult:
     """One cell of the paper's factorial design (competition level x scheme).
 
     Event loop: all pods arrive at t=0 in the interleaved Table-V stream;
     each is scheduled against current cluster state; pods that do not fit wait
     in a FIFO pending queue and are retried whenever a running pod completes
     (kube-scheduler backoff-and-retry, idealized).
+
+    ``batch=True`` routes each round's TOPSIS arrivals through
+    ``BatchScheduler.select_many`` (one scoring pass per burst on
+    ``batch_backend``) instead of the per-pod rescore loop — the fleet-scale
+    path. Default-scheduler pods always go through the per-pod baseline.
+    Within a round, default pods bind during the per-pod pass and the burst
+    is scored against the resulting snapshot, so placements are not
+    bitwise-identical to ``batch=False`` (the documented snapshot trade-off
+    of ``BatchScheduler``); the pending retry queue stays FIFO either way.
     """
     nodes = cluster_factory()
-    sched = {"topsis": GreenPodScheduler(scheme, adaptive=adaptive),
+    sched = {"topsis": (BatchScheduler(scheme, adaptive=adaptive,
+                                       backend=batch_backend) if batch
+                        else GreenPodScheduler(scheme, adaptive=adaptive)),
              "default": DefaultK8sScheduler()}
     pending: list[Pod] = list(make_pods(level))
     running: list[tuple[float, int, Pod, int]] = []   # (end_t, uid, pod, node_i)
@@ -114,21 +158,26 @@ def run_experiment(level: str, scheme: str,
             unschedulable += len(pending)   # nothing can ever fit
             break
         progress = False
-        still: list[Pod] = []
+        placed: set[int] = set()
+        burst: list[Pod] = []
         for pod in pending:
+            if batch and pod.scheduler == "topsis":
+                burst.append(pod)
+                continue
             idx, diag = sched[pod.scheduler].select(pod, nodes)
             if idx is None:
-                still.append(pod)
                 continue
-            node = nodes[idx]
-            node.bind(pod.cpu, pod.mem)
-            rt = predict_exec_time(pod, node)
-            ej = task_energy_joules(node.node_class, rt, pod.cpu)
-            records.append(PodRecord(pod, node.name, node.node_class, t, rt,
-                                     ej, diag["scheduling_time_s"]))
-            heapq.heappush(running, (t + rt, pod.uid, pod, idx))
+            _commit(pod, idx, nodes, t, diag["scheduling_time_s"], records,
+                    running)
+            placed.add(pod.uid)
             progress = True
-        pending = still
+        if burst:
+            b_still, b_progress = run_burst(burst, nodes, sched["topsis"], t,
+                                            records, running)
+            placed.update({p.uid for p in burst} - {p.uid for p in b_still})
+            progress = progress or b_progress
+        # unplaced pods retry in their original arrival (FIFO) order
+        pending = [p for p in pending if p.uid not in placed]
         if pending and running:
             # advance time to the next completion, free its resources, retry
             end_t, _, pod, idx = heapq.heappop(running)

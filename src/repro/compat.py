@@ -1,0 +1,72 @@
+"""JAX version compatibility shims.
+
+The repo pins jax 0.4.37 (the jaxlib baked into the container); several
+sharding APIs the model/launch layers rely on only exist in jax >= 0.5:
+
+  * ``jax.sharding.AxisType`` / ``jax.make_mesh(..., axis_types=...)``
+  * ``jax.sharding.get_abstract_mesh()`` (ambient-mesh lookup)
+  * ``jax.shard_map`` (top-level, with ``check_vma``)
+  * ``jax.set_mesh``
+
+Each shim dispatches on feature presence (never on version strings) and
+degrades to the 0.4.x equivalent: the ``with mesh:`` thread-local for
+ambient-mesh lookup and ``jax.experimental.shard_map`` for shard_map.
+"""
+from __future__ import annotations
+
+import jax
+
+_HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+_HAS_GET_ABSTRACT_MESH = hasattr(jax.sharding, "get_abstract_mesh")
+_HAS_TOP_LEVEL_SHARD_MAP = hasattr(jax, "shard_map")
+
+
+def axis_types_kwarg(n_axes: int) -> dict:
+    """kwargs for ``jax.make_mesh``: explicit Auto axis types where the
+    installed jax supports them, nothing otherwise (0.4.x meshes are
+    implicitly Auto on every axis)."""
+    if _HAS_AXIS_TYPE:
+        return {"axis_types": (jax.sharding.AxisType.Auto,) * n_axes}
+    return {}
+
+
+def get_abstract_mesh():
+    """Ambient mesh, or None when no mesh is installed.
+
+    jax >= 0.5 exposes this directly (normalized here to None when the
+    abstract mesh is empty); 0.4.x falls back to the mesh installed by the
+    ``with mesh:`` context manager. Either way the result supports
+    ``.axis_names`` and ``.shape[axis]``."""
+    if _HAS_GET_ABSTRACT_MESH:
+        m = jax.sharding.get_abstract_mesh()
+        if m is None or not m.axis_names:
+            return None
+        return m
+    from jax._src import mesh as mesh_lib
+    m = mesh_lib.thread_resources.env.physical_mesh
+    return None if m.empty else m
+
+
+def set_mesh(mesh) -> None:
+    """``jax.set_mesh`` where available; a no-op on 0.4.x, where the
+    ``with mesh:`` context (which every caller also enters) is the only
+    ambient-mesh mechanism."""
+    if hasattr(jax, "set_mesh"):
+        jax.set_mesh(mesh)
+
+
+def shard_map(f, *, mesh=None, in_specs, out_specs):
+    """``jax.shard_map(..., check_vma=False)`` on new jax;
+    ``jax.experimental.shard_map.shard_map(..., check_rep=False)`` on 0.4.x
+    (same replication-check escape hatch under its earlier name).
+
+    ``mesh=None`` uses the ambient mesh."""
+    if _HAS_TOP_LEVEL_SHARD_MAP:
+        kw = {} if mesh is None else {"mesh": mesh}
+        return jax.shard_map(f, in_specs=in_specs, out_specs=out_specs,
+                             check_vma=False, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    if mesh is None:
+        mesh = get_abstract_mesh()
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)

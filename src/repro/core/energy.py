@@ -76,6 +76,20 @@ def predicted_task_energy_joules(node_class: str, runtime_s: float,
     return e
 
 
+def predicted_task_energy_joules_np(dyn_power_per_vcpu, idle_power,
+                                    runtime_s, cpu_request, awake):
+    """Vectorized :func:`predicted_task_energy_joules` over node columns.
+
+    All arguments broadcast (numpy arrays or scalars); ``awake`` is a bool
+    mask. Same arithmetic and operand order as the scalar form, so the two
+    agree bitwise on float64 inputs — the batched scheduler's decision
+    matrix must rank identically to the per-pod path.
+    """
+    import numpy as np
+    e = dyn_power_per_vcpu * cpu_request * runtime_s
+    return e + np.where(awake, 0.0, idle_power * runtime_s)
+
+
 # --- TPU fleet (beyond-paper) ----------------------------------------------
 TPU_V5E_TDP_W = 250.0        # per-chip board power envelope
 TPU_V5E_IDLE_W = 70.0

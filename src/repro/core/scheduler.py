@@ -1,10 +1,22 @@
-"""Schedulers: GreenPod (TOPSIS) and the default-K8s baseline.
+"""Schedulers: GreenPod (TOPSIS), its fleet-scale batched variant, and the
+default-K8s baseline.
 
-Both expose ``select(pod, nodes) -> (node_index | None, diagnostics)`` over a
-list of ``repro.cluster.node.Node``. The baseline reimplements the upstream
-kube-scheduler scoring pipeline the paper compares against:
-filter (PodFitsResources) → score (LeastRequestedPriority +
-BalancedResourceAllocation) → bind to max score.
+Per-pod schedulers expose ``select(pod, nodes) -> (node_index | None,
+diagnostics)`` over a list of ``repro.cluster.node.Node`` (or a prebuilt
+``NodeTable``). ``BatchScheduler.select_many(pods, nodes)`` scores a whole
+queue of pods against one fleet snapshot in a single call — the 1000+-node
+path. The baseline reimplements the upstream kube-scheduler scoring
+pipeline the paper compares against: filter (PodFitsResources) → score
+(LeastRequestedPriority + BalancedResourceAllocation) → bind to max score.
+
+Backends (scoring engines, identical semantics — tests assert equivalence):
+
+  numpy   — ``topsis.closeness_np``; lowest latency for single decisions
+            (no device dispatch) and the semantic reference.
+  jax     — jitted jnp engine; ``BatchScheduler`` vmaps it over the pod
+            queue (``topsis.batched_closeness``) for throughput.
+  pallas  — the tiled TPU kernel via ``repro.kernels.ops`` (interpret mode
+            on CPU, Mosaic on TPU); for fleets large enough to tile.
 """
 from __future__ import annotations
 
@@ -15,12 +27,15 @@ import numpy as np
 
 from repro.core import topsis
 from repro.core.criteria import benefit_mask
-from repro.core.energy import predicted_task_energy_joules
+from repro.core.energy import (predicted_task_energy_joules,
+                               predicted_task_energy_joules_np)
 from repro.core.weighting import adaptive_weights, weights_for
-from repro.cluster.node import Node
+from repro.cluster.node import Node, NodeTable
 from repro.cluster.workload import Pod
 
 _BENEFIT = benefit_mask()
+
+BACKENDS = ("numpy", "jax", "pallas")
 
 
 def predict_exec_time(pod: Pod, node: Node) -> float:
@@ -36,20 +51,66 @@ def predict_energy(pod: Pod, node: Node) -> float:
         node.node_class, predict_exec_time(pod, node), pod.cpu, awake)
 
 
-def decision_matrix(pod: Pod, nodes: Sequence[Node]) -> np.ndarray:
-    """(N, 5) GreenPod decision matrix (criteria.CRITERIA_NAMES order)."""
-    rows = []
-    for n in nodes:
-        cpu_after = (n.reserved_cpu + n.used_cpu + pod.cpu) / n.vcpus
-        mem_after = (n.reserved_mem + n.used_mem + pod.mem) / n.mem_gb
-        rows.append([
-            predict_exec_time(pod, n),
-            predict_energy(pod, n),
-            max(1.0 - cpu_after, 0.0),   # core availability (fraction free)
-            max(1.0 - mem_after, 0.0),   # memory availability (fraction free)
-            1.0 - abs(cpu_after - mem_after),
-        ])
-    return np.asarray(rows, dtype=np.float64)
+def _as_table(nodes) -> NodeTable:
+    return nodes if isinstance(nodes, NodeTable) else NodeTable.from_nodes(nodes)
+
+
+def decision_matrix_table(cpu, mem, base_time_s,
+                          table: NodeTable) -> np.ndarray:
+    """(..., N, 5) GreenPod decision matrix by broadcasting over the fleet's
+    column arrays (criteria.CRITERIA_NAMES order) — no per-node Python loop.
+
+    ``cpu`` / ``mem`` / ``base_time_s`` are scalars for one pod (→ (N, 5))
+    or ``(P, 1)`` arrays for a queue (→ (P, N, 5))."""
+    exec_t = base_time_s / table.speed
+    energy = predicted_task_energy_joules_np(
+        table.dyn_power_per_vcpu, table.idle_power, exec_t, cpu, table.awake)
+    cpu_after = (table.reserved_cpu + table.used_cpu + cpu) / table.vcpus
+    mem_after = (table.reserved_mem + table.used_mem + mem) / table.mem_gb
+    rows = [
+        np.broadcast_to(exec_t, cpu_after.shape),
+        energy,
+        np.maximum(1.0 - cpu_after, 0.0),    # core availability
+        np.maximum(1.0 - mem_after, 0.0),    # memory availability
+        1.0 - np.abs(cpu_after - mem_after),
+    ]
+    return np.stack(rows, axis=-1).astype(np.float64, copy=False)
+
+
+def decision_matrix(pod: Pod, nodes) -> np.ndarray:
+    """(N, 5) decision matrix for one pod; ``nodes`` is a Node list or a
+    NodeTable."""
+    table = _as_table(nodes)
+    return decision_matrix_table(pod.cpu, pod.mem, pod.workload.base_time_s,
+                                 table)
+
+
+def decision_matrix_batch(pods: Sequence[Pod], nodes) -> np.ndarray:
+    """(P, N, 5) decision tensor for a queue of pods against one fleet
+    snapshot (every pod scored on identical cluster state)."""
+    table = _as_table(nodes)
+    col = lambda xs: np.asarray(xs, dtype=np.float64)[:, None]
+    return decision_matrix_table(col([p.cpu for p in pods]),
+                                 col([p.mem for p in pods]),
+                                 col([p.workload.base_time_s for p in pods]),
+                                 table)
+
+
+def _score(mat: np.ndarray, weights: np.ndarray, valid: np.ndarray,
+           backend: str) -> np.ndarray:
+    """(N,) closeness for one decision matrix on the given backend
+    (invalid rows are -inf)."""
+    if backend == "numpy":
+        return np.asarray(topsis.closeness_np(mat, weights, _BENEFIT,
+                                              valid).closeness)
+    if backend == "jax":
+        return np.asarray(topsis.closeness(mat, weights, _BENEFIT,
+                                           valid).closeness)
+    if backend == "pallas":
+        from repro.kernels import ops
+        return np.asarray(ops.topsis_closeness(mat, weights, _BENEFIT,
+                                               valid=valid))
+    raise ValueError(f"unknown backend {backend!r}; choose from {BACKENDS}")
 
 
 class GreenPodScheduler:
@@ -61,33 +122,131 @@ class GreenPodScheduler:
                  backend: str = "numpy"):
         self.scheme = scheme
         self.adaptive = adaptive
-        # "numpy" for low-latency single decisions on host; "jax" exercises
-        # the jittable path (identical semantics, used for fleet-scale
-        # batched scoring and on-TPU scheduling).
         self.backend = backend
         self.decision_log: list[dict] = []
 
-    def weights(self, nodes: Sequence[Node]) -> np.ndarray:
+    def weights(self, nodes) -> np.ndarray:
         if not self.adaptive:
             return weights_for(self.scheme)
-        util = float(np.mean([n.cpu_util for n in nodes]))
+        util = float(np.mean(_as_table(nodes).cpu_util))
         return adaptive_weights(self.scheme, util)
 
-    def select(self, pod: Pod, nodes: Sequence[Node]):
+    def select(self, pod: Pod, nodes):
         t0 = time.perf_counter()
-        valid = np.array([n.fits(pod.cpu, pod.mem) for n in nodes])
+        table = _as_table(nodes)
+        valid = table.fits(pod.cpu, pod.mem)
         if not valid.any():
             return None, {"reason": "unschedulable"}
-        mat = decision_matrix(pod, nodes)
-        fn = topsis.closeness_np if self.backend == "numpy" else topsis.closeness
-        res = fn(mat, self.weights(nodes), _BENEFIT, valid)
-        idx = int(res.ranking[0])
+        mat = decision_matrix_table(pod.cpu, pod.mem,
+                                    pod.workload.base_time_s, table)
+        cc = _score(mat, self.weights(table), valid, self.backend)
+        idx = int(np.argmax(cc))   # first max — same tie-break as a stable sort
         dt = time.perf_counter() - t0
-        diag = {"closeness": np.asarray(res.closeness),
-                "scheduling_time_s": dt, "matrix": mat}
-        self.decision_log.append({"pod": pod.uid, "node": nodes[idx].name,
+        diag = {"closeness": cc, "scheduling_time_s": dt, "matrix": mat}
+        self.decision_log.append({"pod": pod.uid, "node": table.names[idx],
                                   "time_s": dt})
         return idx, diag
+
+
+class BatchScheduler:
+    """Fleet-scale batched TOPSIS: one scoring pass per arrival burst.
+
+    ``select_many`` builds the (P, N, 5) decision tensor by broadcasting,
+    scores every pod against the same fleet snapshot on the configured
+    backend, then commits placements greedily in queue order against a
+    capacity ledger (each pod takes its best-ranked node that still fits).
+    Snapshot scoring is the throughput trade-off vs. the per-pod scheduler's
+    rescore-after-every-bind: one engine call amortizes dispatch over the
+    whole queue, which is what wins at 1000+ nodes (see
+    benchmarks/scheduling_time.py). Input nodes are never mutated — the
+    caller binds from the returned assignments.
+    """
+
+    name = "topsis-batch"
+
+    def __init__(self, scheme: str = "energy_centric", adaptive: bool = False,
+                 backend: str = "jax"):
+        self.scheme = scheme
+        self.adaptive = adaptive
+        self.backend = backend
+        self.decision_log: list[dict] = []
+
+    def weights(self, table: NodeTable) -> np.ndarray:
+        if not self.adaptive:
+            return weights_for(self.scheme)
+        return adaptive_weights(self.scheme, float(np.mean(table.cpu_util)))
+
+    def score_queue(self, pods: Sequence[Pod], nodes) -> np.ndarray:
+        """(P, N) closeness matrix for the whole queue on one snapshot
+        (infeasible nodes are -inf per pod)."""
+        table = _as_table(nodes)
+        mats = decision_matrix_batch(pods, table)
+        valid = table.fits(np.asarray([p.cpu for p in pods])[:, None],
+                           np.asarray([p.mem for p in pods])[:, None])
+        w = self.weights(table)
+        ws = np.broadcast_to(w, (len(pods), w.shape[0]))
+        if self.backend == "numpy":
+            return topsis.batched_closeness_np(mats, ws, _BENEFIT, valid)
+        if self.backend == "jax":
+            import jax.numpy as jnp
+            # jit caches by shape: pad the pod axis to the next power of two
+            # so shrinking retry bursts (P, P-1, ...) hit the cache instead
+            # of recompiling per queue length. Padding rows are all-invalid,
+            # so they score -inf and are sliced off.
+            p = len(pods)
+            p_pad = 1 << max(p - 1, 1).bit_length()
+            if p_pad != p:
+                pad = p_pad - p
+                mats = np.concatenate(
+                    [mats, np.zeros((pad,) + mats.shape[1:])])
+                ws = np.concatenate([ws, np.ones((pad, ws.shape[-1]))])
+                valid = np.concatenate(
+                    [valid, np.zeros((pad, valid.shape[-1]), bool)])
+            cc = topsis.batched_closeness_cc(
+                jnp.asarray(mats), jnp.asarray(ws), jnp.asarray(_BENEFIT),
+                jnp.asarray(valid))
+            return np.asarray(cc[:p])
+        if self.backend == "pallas":
+            from repro.kernels import ops
+            return np.asarray(ops.topsis_closeness_batched(
+                mats, ws, _BENEFIT, valid=valid))
+        raise ValueError(f"unknown backend {self.backend!r}; "
+                         f"choose from {BACKENDS}")
+
+    def select_many(self, pods: Sequence[Pod], nodes):
+        """Place a queue: returns (assignments, diagnostics) where
+        ``assignments[i]`` is the node index for ``pods[i]`` or None."""
+        t0 = time.perf_counter()
+        table = _as_table(nodes)
+        if not len(pods):
+            return [], {"closeness": np.zeros((0, len(table))),
+                        "scheduling_time_s": 0.0, "per_pod_time_s": 0.0}
+        cc = self.score_queue(pods, table)
+        order = np.argsort(-cc, kind="stable", axis=-1)
+        free_cpu = table.free_cpu.copy()
+        free_mem = table.free_mem.copy()
+        assignments: list[int | None] = []
+        for i, pod in enumerate(pods):
+            chosen = None
+            for j in order[i]:
+                if np.isneginf(cc[i, j]):
+                    break               # rest of the ranking is infeasible
+                if free_cpu[j] >= pod.cpu - 1e-9 \
+                        and free_mem[j] >= pod.mem - 1e-9:
+                    chosen = int(j)
+                    free_cpu[j] -= pod.cpu
+                    free_mem[j] -= pod.mem
+                    break
+            assignments.append(chosen)
+        dt = time.perf_counter() - t0
+        per_pod = dt / len(pods)
+        for pod, idx in zip(pods, assignments):
+            self.decision_log.append(
+                {"pod": pod.uid,
+                 "node": table.names[idx] if idx is not None else None,
+                 "time_s": per_pod})
+        return assignments, {"closeness": cc, "scheduling_time_s": dt,
+                             "per_pod_time_s": per_pod}
 
 
 class DefaultK8sScheduler:

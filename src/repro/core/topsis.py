@@ -54,6 +54,24 @@ def ideal_points(weighted: jax.Array, benefit: jax.Array):
     return a_pos, a_neg
 
 
+def masked_ideal_points(weighted: jax.Array, benefit: jax.Array,
+                        valid: jax.Array | None):
+    """Ideal / anti-ideal rows with infeasible alternatives excluded from
+    BOTH reference points: invalid rows are replaced with the worst possible
+    value for A+ and the best possible value for A- so they can never define
+    either extreme. The single source of this rule — the Pallas wrappers in
+    ``repro.kernels.ops`` share it (``closeness_np`` mirrors it in numpy)."""
+    if valid is None:
+        return ideal_points(weighted, benefit)
+    worst = jnp.where(benefit, -jnp.inf, jnp.inf)
+    best = jnp.where(benefit, jnp.inf, -jnp.inf)
+    a_pos, _ = ideal_points(jnp.where(valid[..., None], weighted, worst),
+                            benefit)
+    _, a_neg = ideal_points(jnp.where(valid[..., None], weighted, best),
+                            benefit)
+    return a_pos, a_neg
+
+
 def closeness(matrix: jax.Array, weights: jax.Array, benefit: jax.Array,
               valid: jax.Array | None = None) -> TopsisResult:
     """Full TOPSIS pipeline on a (N, C) decision matrix.
@@ -66,16 +84,7 @@ def closeness(matrix: jax.Array, weights: jax.Array, benefit: jax.Array,
     r = normalize_matrix(matrix)
     v = r * weights
 
-    if valid is not None:
-        # Exclude filtered-out alternatives from BOTH reference points:
-        # replace them with the worst possible value for A+ and the best
-        # possible value for A- so they can never define either extreme.
-        worst = jnp.where(benefit, -jnp.inf, jnp.inf)
-        best = jnp.where(benefit, jnp.inf, -jnp.inf)
-        a_pos, _ = ideal_points(jnp.where(valid[..., None], v, worst), benefit)
-        _, a_neg = ideal_points(jnp.where(valid[..., None], v, best), benefit)
-    else:
-        a_pos, a_neg = ideal_points(v, benefit)
+    a_pos, a_neg = masked_ideal_points(v, benefit, valid)
 
     d_pos = jnp.sqrt(jnp.sum((v - a_pos) ** 2, axis=-1))
     d_neg = jnp.sqrt(jnp.sum((v - a_neg) ** 2, axis=-1))
@@ -102,6 +111,24 @@ def select(matrix: jax.Array, weights: jax.Array, benefit: jax.Array,
 # Batched form: P concurrent pods, each with its own (N, C) matrix + weights.
 batched_closeness = jax.vmap(closeness, in_axes=(0, 0, None, 0))
 
+@jax.jit
+def batched_closeness_cc(mats, ws, benefit, valids):
+    """Closeness coefficients only, (P, N). Returning just the scores lets
+    XLA drop the ranking sort and the (P, N, C) weighted tensor from the
+    program — at N=8k the scheduler only reads closeness, and hauling the
+    full TopsisResult back to host dominates the batch runtime."""
+    return batched_closeness(mats, ws, benefit, valids).closeness
+
+
+def batched_closeness_np(mats, ws, benefit, valids=None) -> "np.ndarray":
+    """(P, N) closeness via a per-pod :func:`closeness_np` loop — the
+    reference semantics the batched jax/pallas backends must match."""
+    import numpy as np
+    out = [closeness_np(m, w, benefit,
+                        None if valids is None else valids[i]).closeness
+           for i, (m, w) in enumerate(zip(mats, ws))]
+    return np.stack(out, axis=0)
+
 
 def closeness_np(matrix, weights, benefit, valid=None):
     """NumPy mirror of :func:`closeness` for latency-critical single
@@ -126,10 +153,13 @@ def closeness_np(matrix, weights, benefit, valid=None):
     else:
         a_pos = np.where(benefit, v.max(axis=0), v.min(axis=0))
         a_neg = np.where(benefit, v.min(axis=0), v.max(axis=0))
-    d_pos = np.sqrt(((v - a_pos) ** 2).sum(axis=1))
-    d_neg = np.sqrt(((v - a_neg) ** 2).sum(axis=1))
-    cc = d_neg / np.maximum(d_pos + d_neg, _EPS)
-    cc = np.where(d_pos + d_neg <= _EPS, 0.5, cc)
+    # inf/inf -> nan is expected when NO row is valid (both ideals are
+    # +-inf); the nan closeness is masked to -inf below
+    with np.errstate(invalid="ignore"):
+        d_pos = np.sqrt(((v - a_pos) ** 2).sum(axis=1))
+        d_neg = np.sqrt(((v - a_neg) ** 2).sum(axis=1))
+        cc = d_neg / np.maximum(d_pos + d_neg, _EPS)
+        cc = np.where(d_pos + d_neg <= _EPS, 0.5, cc)
     if valid is not None:
         cc = np.where(valid, cc, -np.inf)
     return TopsisResult(cc, np.argsort(-cc), d_pos, d_neg, v)

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import topsis as _topsis
 from repro.kernels import flash_attention as _fa
 from repro.kernels import rmsnorm_pallas as _rn
 from repro.kernels import topsis_pallas as _tp
@@ -34,29 +35,40 @@ def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
 
 
 # --- TOPSIS -----------------------------------------------------------------
+def _auto_block_n(n: int) -> int:
+    return min(_tp.DEFAULT_BLOCK_N,
+               max(_tp.LANE, 2 ** int(np.ceil(np.log2(max(n, 1))))))
+
+
 def topsis_closeness(matrix: jax.Array, weights: jax.Array,
-                     benefit: jax.Array, *, block_n: int | None = None,
+                     benefit: jax.Array, *, valid: jax.Array | None = None,
+                     block_n: int | None = None,
                      interpret: bool | None = None) -> jax.Array:
     """Closeness coefficients for (N, C) decision matrix; C <= 8.
 
     Global reductions (column norms, ideal points) run in XLA; the O(N*C)
-    distance/closeness hot loop runs in the Pallas kernel.
+    distance/closeness hot loop runs in the Pallas kernel. ``valid`` is an
+    optional (N,) feasibility mask: invalid rows are excluded from the ideal
+    points and returned as -inf (never rank first) — identical semantics to
+    ``repro.core.topsis.closeness``.
     """
     if interpret is None:
         interpret = not _on_tpu()
     n, c = matrix.shape
     assert c <= _tp.C_PAD, f"at most {_tp.C_PAD} criteria, got {c}"
-    w = weights / jnp.maximum(jnp.sum(weights), _EPS)
-    mat = matrix.astype(jnp.float32)
+    benefit = jnp.asarray(benefit, bool)
+    if valid is not None:
+        valid = jnp.asarray(valid, bool)
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.maximum(jnp.sum(w), _EPS)
+    mat = jnp.asarray(matrix).astype(jnp.float32)
     norms = jnp.sqrt(jnp.sum(mat * mat, axis=0))
     inv_norm = 1.0 / jnp.maximum(norms, _EPS)
     v = mat * inv_norm * w
-    a_pos = jnp.where(benefit, jnp.max(v, axis=0), jnp.min(v, axis=0))
-    a_neg = jnp.where(benefit, jnp.min(v, axis=0), jnp.max(v, axis=0))
+    a_pos, a_neg = _topsis.masked_ideal_points(v, benefit, valid)
 
     if block_n is None:
-        block_n = min(_tp.DEFAULT_BLOCK_N,
-                      max(_tp.LANE, 2 ** int(np.ceil(np.log2(max(n, 1))))))
+        block_n = _auto_block_n(n)
     xt = _pad_to(_pad_to(mat.T, 0, _tp.C_PAD), 1, block_n)
 
     def col(x):  # (C,) -> (C_PAD, 1)
@@ -65,7 +77,56 @@ def topsis_closeness(matrix: jax.Array, weights: jax.Array,
     cc = _tp.topsis_closeness_blocks(xt, col(inv_norm), col(w), col(a_pos),
                                      col(a_neg), block_n=block_n,
                                      interpret=interpret)
-    return cc[0, :n]
+    cc = cc[0, :n]
+    if valid is not None:
+        cc = jnp.where(valid, cc, -jnp.inf)
+    return cc
+
+
+def topsis_closeness_batched(mats: jax.Array, weights: jax.Array,
+                             benefit: jax.Array, *,
+                             valid: jax.Array | None = None,
+                             block_n: int | None = None,
+                             interpret: bool | None = None) -> jax.Array:
+    """(P, N) closeness for a (P, N, C) queue tensor; C <= 8.
+
+    The fleet-scale batch path: per-pod column norms and ideal points are
+    global reductions in XLA; the Pallas kernel streams the (pods x node
+    blocks) grid. ``weights`` is (C,) shared or (P, C) per pod; ``valid`` an
+    optional (P, N) feasibility mask (excluded from ideals, -inf in the
+    result, as in the single-matrix form).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    mats = jnp.asarray(mats).astype(jnp.float32)
+    p, n, c = mats.shape
+    assert c <= _tp.C_PAD, f"at most {_tp.C_PAD} criteria, got {c}"
+    benefit = jnp.asarray(benefit, bool)
+    if valid is not None:
+        valid = jnp.asarray(valid, bool)
+    w = jnp.asarray(weights, jnp.float32)
+    if w.ndim == 1:
+        w = jnp.broadcast_to(w, (p, c))
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), _EPS)
+    norms = jnp.sqrt(jnp.sum(mats * mats, axis=1))            # (P, C)
+    inv_norm = 1.0 / jnp.maximum(norms, _EPS)
+    v = mats * inv_norm[:, None, :] * w[:, None, :]
+    a_pos, a_neg = _topsis.masked_ideal_points(v, benefit, valid)  # (P, C)
+
+    if block_n is None:
+        block_n = _auto_block_n(n)
+    xt = _pad_to(_pad_to(mats.transpose(0, 2, 1), 1, _tp.C_PAD), 2, block_n)
+
+    def col(x):  # (P, C) -> (P, C_PAD, 1)
+        return _pad_to(x.astype(jnp.float32), 1, _tp.C_PAD)[:, :, None]
+
+    cc = _tp.topsis_closeness_batched_blocks(
+        xt, col(inv_norm), col(w), col(a_pos), col(a_neg),
+        block_n=block_n, interpret=interpret)
+    cc = cc[:, 0, :n]
+    if valid is not None:
+        cc = jnp.where(valid, cc, -jnp.inf)
+    return cc
 
 
 # --- RMSNorm ----------------------------------------------------------------

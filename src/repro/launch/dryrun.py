@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs import registry
 from repro.launch import hlo_analysis, specs
 from repro.launch.mesh import make_production_mesh
@@ -176,7 +177,7 @@ def run_cell(arch: str, shape: str, mesh_kind: str, hlo_dir: str | None = None,
                  "chips": chips, "opt": opt, "plan": dataclasses.asdict(plan)}
     try:
         t0 = time.time()
-        jax.set_mesh(mesh)   # ambient mesh for shard_map'd Pallas kernels
+        compat.set_mesh(mesh)   # ambient mesh for shard_map'd Pallas kernels
         with mesh:
             jitted, args, cfg, c = build_cell(arch, shape, mesh, plan)
             lowered = jitted.lower(*args)
@@ -184,7 +185,7 @@ def run_cell(arch: str, shape: str, mesh_kind: str, hlo_dir: str | None = None,
             t1 = time.time()
             compiled = lowered.compile()
             rec["compile_s"] = round(time.time() - t1, 1)
-        ca = compiled.cost_analysis()
+        ca = hlo_analysis.xla_cost_analysis(compiled)
         ma = compiled.memory_analysis()
         # XLA's cost_analysis counts while bodies ONCE (no trip
         # multiplication) — recorded for reference only; the roofline uses

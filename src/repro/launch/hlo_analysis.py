@@ -578,6 +578,20 @@ class Analyzer:
         return self.cost_of(self.entry, 1.0)
 
 
+def xla_cost_analysis(compiled) -> dict[str, float]:
+    """XLA's own per-device cost report as a flat dict queryable by key.
+
+    jax <= 0.4.x returns ``compiled.cost_analysis()`` as a list of
+    per-device dicts (one entry per addressable device, identical under
+    SPMD); jax >= 0.5 returns the dict directly. Normalizes both to a dict
+    so callers can index by name ("flops", "bytes accessed", ...).
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
 def analyze(hlo: str) -> dict[str, Any]:
     """Top-level: per-device trip-adjusted flops / HBM bytes / collective
     bytes + per-collective breakdown."""

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.models.config import ModelConfig
 
 Params = dict[str, Any]
@@ -89,7 +90,7 @@ _Q_CHUNK = 4096
 def _flash_shardable(cfg: ModelConfig) -> bool:
     """Flash path needs an ambient mesh whose model axis divides the query
     heads (each rank runs the kernel on its local heads)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or "model" not in mesh.axis_names:
         return False
     m = mesh.shape["model"]
@@ -115,7 +116,7 @@ def _flash_sdpa(cfg: ModelConfig, q, k, v, *, causal: bool,
     traffic (launch/hlo_analysis.py VMEM-scope rule)."""
     from repro.kernels import ops as kops   # local import: no cycle at load
 
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     m = mesh.shape["model"]
     ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     b, s, h, d = q.shape
@@ -138,11 +139,10 @@ def _flash_sdpa(cfg: ModelConfig, q, k, v, *, causal: bool,
                                     window=window)
 
     kv_spec = P(ba, "model" if kv_sharded else None, None, None)
-    out = jax.shard_map(local,
-                        in_specs=(P(ba, "model", None, None),
-                                  kv_spec, kv_spec),
-                        out_specs=P(ba, "model", None, None),
-                        check_vma=False)(
+    out = compat.shard_map(local, mesh=mesh,
+                           in_specs=(P(ba, "model", None, None),
+                                     kv_spec, kv_spec),
+                           out_specs=P(ba, "model", None, None))(
         q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
         v.transpose(0, 2, 1, 3))
     return out.transpose(0, 2, 1, 3)
@@ -175,7 +175,7 @@ def _sdpa(q, k, v, *, causal, window, q_pos=None, kv_len=None):
     # For TRAIN/PREFILL with hkv not divisible by the model axis, grouped
     # logits (B,hkv,g,S,T) lose their clean head sharding and cost MORE
     # (llama-3.2-vision-90b train: memory +11%) — use repeat there.
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     m = mesh.shape.get("model", 1) if mesh is not None \
         and hasattr(mesh, "shape") else 1
     grouped = (s == 1) or hkv % max(m, 1) == 0 or hkv == h

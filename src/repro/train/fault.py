@@ -76,6 +76,13 @@ class Supervisor:
                 restarts += 1
                 if restarts > self.max_restarts:
                     raise
+                # land in-flight async saves before looking for the latest
+                # checkpoint, else a crash right after a non-blocking save
+                # restarts from a stale (or no) checkpoint
+                for t in pending:
+                    if t is not None:
+                        t.join()
+                pending.clear()
                 last = checkpoint.latest_step(self.ckpt_dir)
                 if last is not None:
                     state = checkpoint.restore(self.ckpt_dir, last, state,

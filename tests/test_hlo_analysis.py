@@ -41,7 +41,7 @@ def test_scan_multiplies_by_trip_count():
     want = 12 * 2 * 8 * 64 * 64
     assert r["flops_per_dev"] == pytest.approx(want, rel=0.05)
     # XLA's own cost analysis counts the body ONCE — our analyzer must not
-    xla = jax.jit(f).lower(ws, x).compile().cost_analysis()["flops"]
+    xla = H.xla_cost_analysis(jax.jit(f).lower(ws, x).compile())["flops"]
     assert r["flops_per_dev"] > 5 * xla
 
 

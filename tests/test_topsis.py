@@ -1,10 +1,41 @@
-"""TOPSIS engine: unit + property tests (paper's core contribution)."""
+"""TOPSIS engine: unit + property tests (paper's core contribution).
+
+The property-based block needs ``hypothesis`` (requirements-dev.txt); when
+it is absent those tests skip with a clear reason and the unit tests still
+run.
+"""
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
-from hypothesis.extra import numpy as hnp
+
+try:
+    from hypothesis import given, settings, strategies as st
+    from hypothesis.extra import numpy as hnp
+except ModuleNotFoundError:
+    # Degrade gracefully: stand-in decorators collect each property test as
+    # a no-arg test that skips at runtime (mirrors @given consuming the
+    # function's parameters, so pytest never looks for fixtures).
+    def settings(*args, **kwargs):
+        def wrap(f):
+            return f
+        return wrap
+
+    def given(*args, **kwargs):
+        def wrap(f):
+            def skipped():
+                pytest.skip("hypothesis not installed "
+                            "(pip install -r requirements-dev.txt)")
+            skipped.__name__ = f.__name__
+            skipped.__doc__ = f.__doc__
+            return skipped
+        return wrap
+
+    class _AnyStrategy:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = hnp = _AnyStrategy()
 
 from repro.core.topsis import (closeness, closeness_np, normalize_matrix,
                                ideal_points, select)
