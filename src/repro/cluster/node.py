@@ -127,18 +127,25 @@ class NodeTable:
                 & (self.free_mem >= mem - 1e-9))
 
 
+# Paper Table-I capacities (vcpus, mem_gb) per node class, and the capacity
+# jitter applied to synthetic fleets — shared by make_fleet and
+# make_scenario_cluster so the two fleet generators never desynchronize.
+NODE_CAPS: dict[str, tuple[float, float]] = {
+    "A": (2, 4), "B": (2, 8), "C": (4, 16), "default": (2, 8)}
+CAP_SCALES = (1, 2, 4)
+
+
 def make_fleet(n: int, seed: int = 0, utilization: float = 0.0) -> NodeTable:
     """Synthetic heterogeneous fleet of ``n`` nodes for benchmarks/examples:
     the paper's Table-I node classes replicated with jittered capacities and
     (optionally) random pre-existing load."""
     rng = np.random.default_rng(seed)
-    classes = ["A", "B", "C", "default"]
-    caps = {"A": (2, 4), "B": (2, 8), "C": (4, 16), "default": (2, 8)}
+    classes = list(NODE_CAPS)
     nodes = []
     for i in range(n):
         cls_i = classes[int(rng.integers(len(classes)))]
-        vcpus, mem = caps[cls_i]
-        scale = float(rng.choice([1, 2, 4]))
+        vcpus, mem = NODE_CAPS[cls_i]
+        scale = float(rng.choice(CAP_SCALES))
         nodes.append(Node(f"node-{i:05d}", cls_i, vcpus * scale, mem * scale))
     table = NodeTable.from_nodes(nodes)
     if utilization > 0.0:
@@ -146,6 +153,48 @@ def make_fleet(n: int, seed: int = 0, utilization: float = 0.0) -> NodeTable:
         table.used_cpu[:] = u * (table.vcpus - table.reserved_cpu)
         table.used_mem[:] = u * (table.mem_gb - table.reserved_mem)
     return table
+
+
+# Scenario fleet class mixes: probability of each Table-I node class.
+# edge_heavy skews to frugal e2-medium-like boxes (far-edge deployments),
+# cloud_heavy to the fast, power-hungry n2-standard-4 tier, mixed is uniform.
+SCENARIO_PROFILES: dict[str, dict[str, float]] = {
+    "edge_heavy": {"A": 0.60, "B": 0.25, "C": 0.05, "default": 0.10},
+    "cloud_heavy": {"A": 0.05, "B": 0.25, "C": 0.60, "default": 0.10},
+    "mixed": {"A": 0.25, "B": 0.25, "C": 0.25, "default": 0.25},
+}
+
+
+def make_scenario_cluster(profile: str, n: int, seed: int = 0) -> list[Node]:
+    """Scenario fleet for the event-driven engine: ``n`` mutable ``Node``
+    objects (4 ≤ n ≤ 8192) whose class mix follows ``SCENARIO_PROFILES``.
+
+    The first four nodes are one of each Table-I class at paper capacities
+    (every fleet keeps the paper's heterogeneity axis; unlike
+    :func:`make_paper_cluster`, no system reservations on the default
+    node); the rest are drawn from the profile's mix with the capacity
+    jitter of :func:`make_fleet`. Deterministic in ``seed`` — scenario
+    runs replay exactly. Burst scoring converts these to a
+    :class:`NodeTable` snapshot per round (``BatchScheduler.select_many``).
+    """
+    if profile not in SCENARIO_PROFILES:
+        raise ValueError(f"unknown profile {profile!r}; "
+                         f"choose from {sorted(SCENARIO_PROFILES)}")
+    if not 4 <= n <= 8192:
+        raise ValueError(f"fleet size {n} outside [4, 8192]")
+    rng = np.random.default_rng(seed)
+    mix = SCENARIO_PROFILES[profile]
+    classes = list(mix)
+    probs = np.asarray([mix[c] for c in classes], dtype=np.float64)
+    nodes = []
+    for i in range(n):
+        cls_i = (classes[i] if i < 4
+                 else classes[int(rng.choice(len(classes), p=probs))])
+        vcpus, mem = NODE_CAPS[cls_i]
+        scale = 1.0 if i < 4 else float(rng.choice(CAP_SCALES))
+        nodes.append(Node(f"{profile}-{i:05d}", cls_i,
+                          vcpus * scale, mem * scale))
+    return nodes
 
 
 def make_paper_cluster() -> list[Node]:

@@ -1,6 +1,22 @@
-"""Discrete-event cluster simulator reproducing the paper's factorial
-experiment (§IV): both schedulers' pods share one heterogeneous cluster;
-energy is accounted per scheduling decision (Table IV metric definitions).
+"""Event-driven cluster simulation engine.
+
+The paper's factorial experiment (§IV) is one point in this engine's input
+space: every pod arriving at t=0 (``PaperArrivals``) on the 4-node Table-I
+cluster. The engine itself consumes any ``ArrivalProcess`` — Poisson bursts,
+replayed JSON traces — over any fleet (``make_scenario_cluster`` builds
+edge-heavy / cloud-heavy / mixed fleets up to 8192 nodes), and accounts
+energy on a per-node power-state timeline (``repro.core.energy.PowerTimeline``)
+instead of a post-hoc interval union, so every run yields energy-vs-time
+series per scheduler in addition to the paper's scalar totals (Table IV
+metric definitions).
+
+Event loop semantics (kube-scheduler backoff-and-retry, idealized): a
+scheduling round places every pending pod it can against current cluster
+state; pods that do not fit wait in a FIFO queue and are retried whenever a
+running pod completes or a new burst arrives. With ``PaperArrivals`` this
+reduces exactly to the legacy all-at-t0 loop — ``table6()`` reproduces the
+pre-refactor paper-mode output bitwise (tests/test_scenarios.py pins it
+against the recorded golden).
 """
 from __future__ import annotations
 
@@ -10,11 +26,12 @@ from typing import Callable
 
 import numpy as np
 
-from repro.core.energy import NODE_ENERGY_PROFILES, task_energy_joules
+from repro.core.energy import (NODE_ENERGY_PROFILES, PowerTimeline,
+                               task_energy_joules)
 from repro.core.scheduler import (BatchScheduler, DefaultK8sScheduler,
                                   GreenPodScheduler, predict_exec_time)
 from repro.cluster.node import Node, make_paper_cluster
-from repro.cluster.workload import Pod, make_pods
+from repro.cluster.workload import ArrivalProcess, PaperArrivals, Pod
 
 
 @dataclasses.dataclass
@@ -28,44 +45,40 @@ class PodRecord:
     scheduling_time_s: float
 
 
-def _union_length(intervals: list[tuple[float, float]]) -> float:
-    """Total length of the union of [start, end) intervals."""
-    if not intervals:
-        return 0.0
-    total, cur_s, cur_e = 0.0, *sorted(intervals)[0]
-    for s, e in sorted(intervals)[1:]:
-        if s > cur_e:
-            total += cur_e - cur_s
-            cur_s, cur_e = s, e
-        else:
-            cur_e = max(cur_e, e)
-    return total + (cur_e - cur_s)
-
-
 @dataclasses.dataclass
 class SimResult:
     records: list[PodRecord]
     unschedulable: int
+    timeline: PowerTimeline | None = None
+
+    def _timeline(self) -> PowerTimeline:
+        """The run's power timeline (rebuilt from records for results
+        constructed without one)."""
+        if self.timeline is None:
+            self.timeline = PowerTimeline()
+            for r in self.records:
+                self.timeline.add(r.node, r.node_class, r.pod.scheduler,
+                                  r.start_s, r.runtime_s,
+                                  r.energy_j / r.runtime_s if r.runtime_s
+                                  else 0.0)
+        return self.timeline
 
     def energy_kj(self, scheduler: str) -> float:
         """Node-level energy attributed to a scheduler: per-pod dynamic energy
         plus each node's idle power for the union time that scheduler's pods
         keep the node awake (Table IV: 'efficiency of scheduling decisions
-        from an energy optimization perspective')."""
-        dyn = sum(r.energy_j for r in self.records
-                  if r.pod.scheduler == scheduler)
-        idle = 0.0
-        by_node: dict[str, list[tuple[float, float]]] = {}
-        classes: dict[str, str] = {}
-        for r in self.records:
-            if r.pod.scheduler == scheduler:
-                by_node.setdefault(r.node, []).append(
-                    (r.start_s, r.start_s + r.runtime_s))
-                classes[r.node] = r.node_class
-        for node, ivs in by_node.items():
-            idle += (NODE_ENERGY_PROFILES[classes[node]]["idle_power"]
-                     * _union_length(ivs))
-        return (dyn + idle) / 1000.0
+        from an energy optimization perspective') — now read off the
+        power-state timeline."""
+        return self._timeline().energy_kj(scheduler)
+
+    def energy_series(self, scheduler: str | None = None):
+        """Time-resolved cumulative energy ``(edges_s, joules)`` for one
+        scheduler (or the whole cluster when None)."""
+        return self._timeline().energy_series(scheduler)
+
+    def power_series(self, scheduler: str | None = None):
+        """Piecewise-constant total power ``(edges_s, watts)``."""
+        return self._timeline().power_series(scheduler)
 
     def mean_energy_kj(self, scheduler: str) -> float:
         """Per-pod average energy — the unit of paper Table VI (its kJ values
@@ -83,6 +96,10 @@ class SimResult:
         ts = [r.runtime_s for r in self.records if r.pod.scheduler == scheduler]
         return float(np.mean(ts)) if ts else 0.0
 
+    def unschedulable_rate(self) -> float:
+        total = len(self.records) + self.unschedulable
+        return self.unschedulable / total if total else 0.0
+
     def allocation(self, scheduler: str) -> dict[str, int]:
         out: dict[str, int] = {}
         for r in self.records:
@@ -93,71 +110,82 @@ class SimResult:
 
 def _commit(pod: Pod, idx: int, nodes: list[Node], t: float,
             sched_time_s: float, records: list[PodRecord],
-            running: list) -> None:
-    """Bind pod to nodes[idx] and append its record + completion event."""
+            running: list, timeline: PowerTimeline) -> None:
+    """Bind pod to nodes[idx], append its record + completion event, and
+    post the task segment to the power timeline."""
     node = nodes[idx]
     node.bind(pod.cpu, pod.mem)
     rt = predict_exec_time(pod, node)
     ej = task_energy_joules(node.node_class, rt, pod.cpu)
     records.append(PodRecord(pod, node.name, node.node_class, t, rt,
                              ej, sched_time_s))
+    timeline.add(node.name, node.node_class, pod.scheduler, t, rt,
+                 NODE_ENERGY_PROFILES[node.node_class]["dyn_power_per_vcpu"]
+                 * pod.cpu)
     heapq.heappush(running, (t + rt, pod.uid, pod, idx))
 
 
 def run_burst(pods: list[Pod], nodes: list[Node], sched: BatchScheduler,
-              t: float, records: list[PodRecord],
-              running: list) -> tuple[list[Pod], bool]:
+              t: float, records: list[PodRecord], running: list,
+              timeline: PowerTimeline) -> list[Pod]:
     """Schedule an arrival burst through one batched scoring pass
     (``BatchScheduler.select_many``) and commit the assignments. Returns
-    (pods that did not fit, whether any placement was made)."""
+    the pods that did not fit."""
     assignments, diag = sched.select_many(pods, nodes)
     still: list[Pod] = []
-    progress = False
     for pod, idx in zip(pods, assignments):
         if idx is None:
             still.append(pod)
             continue
-        _commit(pod, idx, nodes, t, diag["per_pod_time_s"], records, running)
-        progress = True
-    return still, progress
+        _commit(pod, idx, nodes, t, diag["per_pod_time_s"], records, running,
+                timeline)
+    return still
 
 
-def run_experiment(level: str, scheme: str,
-                   cluster_factory: Callable[[], list[Node]] = make_paper_cluster,
-                   adaptive: bool = False, batch: bool = False,
-                   batch_backend: str = "jax") -> SimResult:
-    """One cell of the paper's factorial design (competition level x scheme).
+def run_scenario(arrivals: ArrivalProcess, scheme: str,
+                 cluster_factory: Callable[[], list[Node]] = make_paper_cluster,
+                 adaptive: bool = False, batch: bool = False,
+                 batch_backend: str = "jax") -> SimResult:
+    """Drive one scenario through the event-driven engine.
 
-    Event loop: all pods arrive at t=0 in the interleaved Table-V stream;
-    each is scheduled against current cluster state; pods that do not fit wait
-    in a FIFO pending queue and are retried whenever a running pod completes
-    (kube-scheduler backoff-and-retry, idealized).
-
-    ``batch=True`` routes each round's TOPSIS arrivals through
-    ``BatchScheduler.select_many`` (one scoring pass per burst on
-    ``batch_backend``) instead of the per-pod rescore loop — the fleet-scale
-    path. Default-scheduler pods always go through the per-pod baseline.
-    Within a round, default pods bind during the per-pod pass and the burst
-    is scored against the resulting snapshot, so placements are not
-    bitwise-identical to ``batch=False`` (the documented snapshot trade-off
-    of ``BatchScheduler``); the pending retry queue stays FIFO either way.
+    Events are pod-arrival bursts (from ``arrivals``) and task completions
+    (from prior placements). Each scheduling round walks the FIFO pending
+    queue against current cluster state: default-scheduler pods and
+    per-pod TOPSIS go through ``select``; with ``batch=True`` the round's
+    TOPSIS pods are scored in one ``BatchScheduler.select_many`` pass on
+    ``batch_backend`` (the fleet-scale path — bursts route through the
+    batched engine). After a round, the clock advances to the earliest of
+    the next completion (releasing exactly one pod's resources before
+    retrying, the legacy backoff step) or the next arrival burst. Pods
+    still pending when no completion or arrival can ever free capacity are
+    counted unschedulable.
     """
     nodes = cluster_factory()
     sched = {"topsis": (BatchScheduler(scheme, adaptive=adaptive,
                                        backend=batch_backend) if batch
                         else GreenPodScheduler(scheme, adaptive=adaptive)),
              "default": DefaultK8sScheduler()}
-    pending: list[Pod] = list(make_pods(level))
+    events = sorted(arrivals.events(), key=lambda ev: ev[0])
+    ei = 0
+    pending: list[Pod] = []
     running: list[tuple[float, int, Pod, int]] = []   # (end_t, uid, pod, node_i)
     records: list[PodRecord] = []
+    timeline = PowerTimeline()
     t = 0.0
     unschedulable = 0
-    progress = True
-    while pending or running:
-        if not progress and not running:
-            unschedulable += len(pending)   # nothing can ever fit
+    while True:
+        # ingest every burst due by the current clock
+        while ei < len(events) and events[ei][0] <= t:
+            pending.extend(events[ei][1])
+            ei += 1
+        # safety net: release anything that finished before now (the advance
+        # step below never moves the clock past an unreleased completion)
+        while running and running[0][0] < t:
+            _, _, done, idx = heapq.heappop(running)
+            nodes[idx].release(done.cpu, done.mem)
+        if not pending and not running and ei >= len(events):
             break
-        progress = False
+        # scheduling round: place what fits, FIFO retry for the rest
         placed: set[int] = set()
         burst: list[Pod] = []
         for pod in pending:
@@ -168,25 +196,52 @@ def run_experiment(level: str, scheme: str,
             if idx is None:
                 continue
             _commit(pod, idx, nodes, t, diag["scheduling_time_s"], records,
-                    running)
+                    running, timeline)
             placed.add(pod.uid)
-            progress = True
         if burst:
-            b_still, b_progress = run_burst(burst, nodes, sched["topsis"], t,
-                                            records, running)
+            b_still = run_burst(burst, nodes, sched["topsis"], t,
+                                records, running, timeline)
             placed.update({p.uid for p in burst} - {p.uid for p in b_still})
-            progress = progress or b_progress
-        # unplaced pods retry in their original arrival (FIFO) order
         pending = [p for p in pending if p.uid not in placed]
-        if pending and running:
-            # advance time to the next completion, free its resources, retry
-            end_t, _, pod, idx = heapq.heappop(running)
-            nodes[idx].release(pod.cpu, pod.mem)
+        # advance the clock to the next event
+        next_arrival = events[ei][0] if ei < len(events) else None
+        next_completion = running[0][0] if running else None
+        if pending and next_completion is not None and (
+                next_arrival is None or next_completion <= next_arrival):
+            # backoff step: free exactly one completed pod, then retry
+            end_t, _, done, idx = heapq.heappop(running)
+            nodes[idx].release(done.cpu, done.mem)
             t = end_t
-            progress = True
-        elif not pending:
+            continue
+        if next_arrival is not None:
+            if next_completion is not None and next_completion <= next_arrival:
+                # release completions due at-or-before the arrival (one per
+                # iteration) so the burst schedules against freed capacity —
+                # including the exact completion==arrival tie
+                end_t, _, done, idx = heapq.heappop(running)
+                nodes[idx].release(done.cpu, done.mem)
+                t = end_t
+                continue
+            t = next_arrival
+            continue
+        if pending:
+            # no completions left, no future arrivals: nothing can ever fit
+            unschedulable += len(pending)
             break
-    return SimResult(records, unschedulable)
+        break   # only running tasks remain; their records are complete
+    return SimResult(records, unschedulable, timeline)
+
+
+def run_experiment(level: str, scheme: str,
+                   cluster_factory: Callable[[], list[Node]] = make_paper_cluster,
+                   adaptive: bool = False, batch: bool = False,
+                   batch_backend: str = "jax") -> SimResult:
+    """One cell of the paper's factorial design (competition level x scheme):
+    the paper-mode arrival process (all pods at t=0, interleaved Table-V
+    stream) through the event-driven engine."""
+    return run_scenario(PaperArrivals(level), scheme,
+                        cluster_factory=cluster_factory, adaptive=adaptive,
+                        batch=batch, batch_backend=batch_backend)
 
 
 def table6(levels=("low", "medium", "high"),

@@ -1,9 +1,11 @@
-"""Containerized AIoT workloads (paper Table II) and competition levels
-(paper Table V)."""
+"""Containerized AIoT workloads (paper Table II), competition levels
+(paper Table V), and the arrival processes that feed the event-driven
+simulator (paper-mode t=0 burst, Poisson bursts, replayable JSON traces)."""
 from __future__ import annotations
 
 import dataclasses
 import itertools
+import json
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,3 +75,115 @@ def make_pods(level: str) -> list[Pod]:
     for d, t in zip(per_sched["default"], per_sched["topsis"]):
         pods.extend((d, t))
     return pods
+
+
+# --- Arrival processes (event-driven simulator input) ------------------------
+class ArrivalProcess:
+    """A time-ordered stream of pod-arrival bursts.
+
+    Implementations yield ``(t_arrival_s, [Pod, ...])`` events from
+    :meth:`events`, non-decreasing in time. The event-driven simulator
+    (``repro.cluster.simulator.run_scenario``) ingests each burst when the
+    clock reaches it; TOPSIS pods of a burst can be scored in one batched
+    pass (``BatchScheduler.select_many``). Processes must be deterministic
+    for a fixed construction (seeded RNGs), so scenario runs replay exactly.
+    """
+
+    def events(self) -> "list[tuple[float, list[Pod]]]":
+        raise NotImplementedError
+
+    def total_pods(self) -> int:
+        return sum(len(pods) for _, pods in self.events())
+
+
+class PaperArrivals(ArrivalProcess):
+    """Paper mode (§IV): every pod of a competition level arrives at t=0 in
+    the interleaved Table-V stream — one burst, post-hoc energy over the
+    busy union. ``table6()`` routes through this process, which is what
+    pins the event-driven engine to the paper's factorial numbers."""
+
+    def __init__(self, level: str):
+        self.level = level
+
+    def events(self):
+        return [(0.0, make_pods(self.level))]
+
+
+class PoissonArrivals(ArrivalProcess):
+    """Poisson burst arrivals: burst epochs are a Poisson process of rate
+    ``rate_per_s`` (exponential inter-arrival gaps), each burst holds
+    ``burst_size`` pods whose kinds are drawn from ``mix`` (a
+    kind -> probability dict over ``WORKLOADS``) and whose scheduler is
+    "topsis" with probability ``topsis_share`` else "default". Fixed
+    ``seed`` makes the stream replayable; ``n_bursts`` bounds the horizon.
+    """
+
+    def __init__(self, rate_per_s: float = 0.2, n_bursts: int = 10,
+                 burst_size: int = 4, mix: dict[str, float] | None = None,
+                 topsis_share: float = 0.5, seed: int = 0):
+        if rate_per_s <= 0:
+            raise ValueError("rate_per_s must be positive")
+        self.rate_per_s = rate_per_s
+        self.n_bursts = n_bursts
+        self.burst_size = burst_size
+        self.mix = dict(mix or {"light": 0.5, "medium": 0.3, "complex": 0.2})
+        if any(k not in WORKLOADS for k in self.mix):
+            raise ValueError(f"unknown workload kind in mix: {self.mix}")
+        self.topsis_share = topsis_share
+        self.seed = seed
+
+    def events(self):
+        import numpy as np
+        rng = np.random.default_rng(self.seed)
+        kinds = list(self.mix)
+        probs = np.asarray([self.mix[k] for k in kinds], dtype=np.float64)
+        probs = probs / probs.sum()
+        uid = itertools.count()
+        t = 0.0
+        out: list[tuple[float, list[Pod]]] = []
+        for _ in range(self.n_bursts):
+            t += float(rng.exponential(1.0 / self.rate_per_s))
+            burst = [
+                Pod(next(uid),
+                    WORKLOADS[kinds[int(rng.choice(len(kinds), p=probs))]],
+                    "topsis" if rng.uniform() < self.topsis_share
+                    else "default")
+                for _ in range(self.burst_size)
+            ]
+            out.append((t, burst))
+        return out
+
+
+class TraceArrivals(ArrivalProcess):
+    """Replayable arrival trace: a list of ``{"t": float, "kind": str,
+    "scheduler": "topsis"|"default", "count": int}`` entries (count
+    defaults to 1), e.g. loaded from a JSON file via :meth:`from_file`.
+    Entries sharing one ``t`` form one burst; bursts are emitted in
+    time-sorted order, entry order preserved within a burst — so a trace
+    replays to the identical pod stream every run.
+    """
+
+    def __init__(self, entries: "list[dict]"):
+        self.entries = list(entries)
+        for e in self.entries:
+            if "t" not in e or float(e["t"]) < 0.0:
+                raise ValueError(f"trace entry needs a non-negative 't': {e}")
+            if e["kind"] not in WORKLOADS:
+                raise ValueError(f"unknown workload kind {e['kind']!r}")
+            if e.get("scheduler", "topsis") not in ("topsis", "default"):
+                raise ValueError(f"unknown scheduler {e['scheduler']!r}")
+
+    @classmethod
+    def from_file(cls, path: str) -> "TraceArrivals":
+        with open(path) as f:
+            return cls(json.load(f))
+
+    def events(self):
+        uid = itertools.count()
+        by_t: dict[float, list[Pod]] = {}
+        for e in sorted(self.entries, key=lambda e: float(e["t"])):
+            pods = by_t.setdefault(float(e["t"]), [])
+            for _ in range(int(e.get("count", 1))):
+                pods.append(Pod(next(uid), WORKLOADS[e["kind"]],
+                                e.get("scheduler", "topsis")))
+        return sorted(by_t.items())

@@ -16,8 +16,18 @@
 
 3. ``chip_energy`` — TPU-side model for the beyond-paper fleet scheduler:
    energy = step_time x chips x (idle + (TDP-idle) x mfu-ish utilization).
+
+4. ``PowerTimeline`` — per-node power-state timeline for the event-driven
+   simulator: every committed placement adds a task segment (node, scheduler,
+   start, runtime, dynamic power); idle attribution is the per-node union of
+   a scheduler's busy intervals (same decomposition the legacy post-hoc
+   ``_union_length`` accounting produced), and the same segments yield
+   piecewise-constant power / cumulative energy *series* over time, which a
+   scalar union cannot express.
 """
 from __future__ import annotations
+
+import dataclasses
 
 
 def blade_power(u_cpu_pct: float, u_mem_acc_per_s: float = 0.0,
@@ -88,6 +98,142 @@ def predicted_task_energy_joules_np(dyn_power_per_vcpu, idle_power,
     import numpy as np
     e = dyn_power_per_vcpu * cpu_request * runtime_s
     return e + np.where(awake, 0.0, idle_power * runtime_s)
+
+
+# --- Per-node power-state timeline (event-driven simulator) -----------------
+def merge_intervals(intervals: list[tuple[float, float]]
+                    ) -> list[tuple[float, float]]:
+    """Union of [start, end) intervals as a sorted list of disjoint
+    intervals."""
+    merged: list[tuple[float, float]] = []
+    if not intervals:
+        return merged
+    ivs = sorted(intervals)
+    cur_s, cur_e = ivs[0]
+    for s, e in ivs[1:]:
+        if s > cur_e:
+            merged.append((cur_s, cur_e))
+            cur_s, cur_e = s, e
+        else:
+            cur_e = max(cur_e, e)
+    merged.append((cur_s, cur_e))
+    return merged
+
+
+def union_length(intervals: list[tuple[float, float]]) -> float:
+    """Total length of the union of [start, end) intervals (same merge
+    order and summation order as the legacy simulator ``_union_length``,
+    so totals agree bitwise)."""
+    return sum(e - s for s, e in merge_intervals(intervals))
+
+
+@dataclasses.dataclass(frozen=True)
+class PowerSegment:
+    """One task's occupancy of one node: draws ``dyn_power_w`` on
+    ``[start_s, start_s + runtime_s)`` and keeps the node awake (idle power
+    attributed to ``scheduler``) for that interval."""
+
+    node: str
+    node_class: str
+    scheduler: str
+    start_s: float
+    runtime_s: float
+    dyn_power_w: float
+
+    @property
+    def end_s(self) -> float:
+        return self.start_s + self.runtime_s
+
+    @property
+    def energy_j(self) -> float:
+        return self.dyn_power_w * self.runtime_s
+
+
+class PowerTimeline:
+    """Per-node power-state timeline: the simulator's energy ledger.
+
+    Segments are appended in commit order. Scalar totals (``energy_kj``)
+    reproduce the legacy union-of-intervals decomposition — dynamic power x
+    runtime per task, plus each node's idle power for the union time a
+    scheduler's tasks keep it awake — while :meth:`power_series` /
+    :meth:`energy_series` expose the same ledger as time-resolved
+    piecewise-constant power and cumulative energy, per scheduler.
+    """
+
+    def __init__(self, segments: list[PowerSegment] | None = None):
+        self.segments: list[PowerSegment] = list(segments or [])
+
+    def add(self, node: str, node_class: str, scheduler: str, start_s: float,
+            runtime_s: float, dyn_power_w: float) -> None:
+        self.segments.append(PowerSegment(node, node_class, scheduler,
+                                          start_s, runtime_s, dyn_power_w))
+
+    def _segs(self, scheduler: str | None) -> list[PowerSegment]:
+        if scheduler is None:
+            return self.segments
+        return [s for s in self.segments if s.scheduler == scheduler]
+
+    def dynamic_energy_j(self, scheduler: str | None = None) -> float:
+        """Sum of per-task dynamic energy, in segment (commit) order —
+        identical arithmetic to summing ``PodRecord.energy_j``."""
+        return sum(s.energy_j for s in self._segs(scheduler))
+
+    def busy_intervals(self, scheduler: str | None = None
+                       ) -> dict[str, list[tuple[float, float]]]:
+        """Per-node busy intervals attributed to ``scheduler``."""
+        by_node: dict[str, list[tuple[float, float]]] = {}
+        for s in self._segs(scheduler):
+            by_node.setdefault(s.node, []).append((s.start_s, s.end_s))
+        return by_node
+
+    def idle_energy_j(self, scheduler: str | None = None) -> float:
+        """Idle (static) energy: each node's idle power x the union time the
+        scheduler's tasks keep it awake — the legacy decomposition."""
+        classes = {s.node: s.node_class for s in self._segs(scheduler)}
+        return sum(NODE_ENERGY_PROFILES[classes[node]]["idle_power"]
+                   * union_length(ivs)
+                   for node, ivs in self.busy_intervals(scheduler).items())
+
+    def energy_kj(self, scheduler: str | None = None) -> float:
+        return (self.dynamic_energy_j(scheduler)
+                + self.idle_energy_j(scheduler)) / 1000.0
+
+    def power_series(self, scheduler: str | None = None):
+        """Piecewise-constant total power: ``(edges, watts)`` with
+        ``watts[k]`` drawn on ``[edges[k], edges[k+1])`` — dynamic power of
+        every running task plus idle power of every node the scheduler keeps
+        awake. ``len(watts) == len(edges) - 1``; empty timelines return
+        ``([], [])``."""
+        import numpy as np
+        segs = self._segs(scheduler)
+        if not segs:
+            return np.zeros(0), np.zeros(0)
+        edges = np.unique(np.asarray(
+            [s.start_s for s in segs] + [s.end_s for s in segs]))
+        idx = {t: i for i, t in enumerate(edges.tolist())}
+        delta = np.zeros(len(edges))
+        for s in segs:                       # dynamic power while running
+            delta[idx[s.start_s]] += s.dyn_power_w
+            delta[idx[s.end_s]] -= s.dyn_power_w
+        classes = {s.node: s.node_class for s in segs}
+        for node, ivs in self.busy_intervals(scheduler).items():
+            p = NODE_ENERGY_PROFILES[classes[node]]["idle_power"]
+            for lo, hi in merge_intervals(ivs):  # idle power while awake
+                delta[idx[lo]] += p
+                delta[idx[hi]] -= p
+        return edges, np.cumsum(delta)[:-1]
+
+    def energy_series(self, scheduler: str | None = None):
+        """Cumulative energy over time: ``(edges, joules)`` with
+        ``joules[k]`` the energy consumed up to ``edges[k]`` (``joules[0]``
+        is 0). The final value equals ``energy_kj() * 1000`` up to float
+        summation order."""
+        import numpy as np
+        edges, watts = self.power_series(scheduler)
+        if not len(edges):
+            return edges, np.zeros(0)
+        return edges, np.concatenate(
+            [[0.0], np.cumsum(watts * np.diff(edges))])
 
 
 # --- TPU fleet (beyond-paper) ----------------------------------------------

@@ -263,25 +263,25 @@ class DefaultK8sScheduler:
     def __init__(self):
         self.decision_log: list[dict] = []
 
-    def select(self, pod: Pod, nodes: Sequence[Node]):
+    def select(self, pod: Pod, nodes):
+        """Vectorized over ``NodeTable`` columns (``nodes`` may be a Node
+        list or a prebuilt table): one broadcast pass scores the whole
+        fleet, infeasible nodes score -1. Identical plugin arithmetic to
+        the upstream per-node loop; ties resolve to the lowest node index
+        (the loop's running-max-with-epsilon tie-break, which only diverges
+        for score gaps below 1e-12 — see tests/test_scheduler.py pinning)."""
         t0 = time.perf_counter()
-        best, best_score = None, -1.0
-        scores = []
-        for i, n in enumerate(nodes):
-            if not n.fits(pod.cpu, pod.mem):
-                scores.append(-1.0)
-                continue
-            cpu_frac = (n.reserved_cpu + n.used_cpu + pod.cpu) / n.vcpus
-            mem_frac = (n.reserved_mem + n.used_mem + pod.mem) / n.mem_gb
-            least = 100.0 * ((1.0 - cpu_frac) + (1.0 - mem_frac)) / 2.0
-            balanced = 100.0 * (1.0 - abs(cpu_frac - mem_frac))
-            score = (least + balanced) / 2.0
-            scores.append(score)
-            if score > best_score + 1e-12:
-                best, best_score = i, score
-        dt = time.perf_counter() - t0
-        if best is None:
+        table = _as_table(nodes)
+        fits = table.fits(pod.cpu, pod.mem)
+        if not fits.any():
             return None, {"reason": "unschedulable"}
-        self.decision_log.append({"pod": pod.uid, "node": nodes[best].name,
+        cpu_frac = (table.reserved_cpu + table.used_cpu + pod.cpu) / table.vcpus
+        mem_frac = (table.reserved_mem + table.used_mem + pod.mem) / table.mem_gb
+        least = 100.0 * ((1.0 - cpu_frac) + (1.0 - mem_frac)) / 2.0
+        balanced = 100.0 * (1.0 - np.abs(cpu_frac - mem_frac))
+        scores = np.where(fits, (least + balanced) / 2.0, -1.0)
+        best = int(np.argmax(scores))
+        dt = time.perf_counter() - t0
+        self.decision_log.append({"pod": pod.uid, "node": table.names[best],
                                   "time_s": dt})
-        return best, {"scores": np.asarray(scores), "scheduling_time_s": dt}
+        return best, {"scores": scores, "scheduling_time_s": dt}

@@ -136,6 +136,82 @@ def test_make_pods_counts_match_table5():
                 assert got == count, (level, sched, kind)
 
 
+def _legacy_default_select(p, nodes):
+    """The pre-vectorization DefaultK8sScheduler.select scoring loop,
+    verbatim (per-node Python loop, running-max-with-epsilon tie-break) —
+    the reference the NodeTable-column path is pinned against."""
+    best, best_score = None, -1.0
+    scores = []
+    for i, n in enumerate(nodes):
+        if not n.fits(p.cpu, p.mem):
+            scores.append(-1.0)
+            continue
+        cpu_frac = (n.reserved_cpu + n.used_cpu + p.cpu) / n.vcpus
+        mem_frac = (n.reserved_mem + n.used_mem + p.mem) / n.mem_gb
+        least = 100.0 * ((1.0 - cpu_frac) + (1.0 - mem_frac)) / 2.0
+        balanced = 100.0 * (1.0 - abs(cpu_frac - mem_frac))
+        score = (least + balanced) / 2.0
+        scores.append(score)
+        if score > best_score + 1e-12:
+            best, best_score = i, score
+    return best, np.asarray(scores)
+
+
+def test_default_scheduler_vectorized_matches_legacy_loop():
+    """Vectorized (NodeTable-column) DefaultK8sScheduler == the per-node
+    loop: identical scores (bitwise — same IEEE ops elementwise) and the
+    identical selected node, across paper clusters and random fleets."""
+    rng = np.random.default_rng(0)
+    cases = [make_paper_cluster()]
+    for trial in range(25):
+        n = int(rng.integers(2, 60))
+        classes = ["A", "B", "C", "default"]
+        nodes = []
+        for i in range(n):
+            cls_i = classes[int(rng.integers(4))]
+            vcpus = float(rng.choice([1, 2, 4, 8]))
+            mem = float(rng.choice([2, 4, 8, 16]))
+            node = Node(f"n{i}", cls_i, vcpus, mem)
+            if rng.uniform() < 0.5:      # random pre-existing load
+                node.used_cpu = float(rng.uniform(0, vcpus))
+                node.used_mem = float(rng.uniform(0, mem))
+            nodes.append(node)
+        cases.append(nodes)
+    d = DefaultK8sScheduler()
+    for nodes in cases:
+        for kind in WORKLOADS:
+            p = pod(kind, sched="default")
+            want_idx, want_scores = _legacy_default_select(p, nodes)
+            got_idx, diag = d.select(p, nodes)
+            if want_idx is None:
+                assert got_idx is None
+                continue
+            assert got_idx == want_idx, (nodes[got_idx].name, kind)
+            np.testing.assert_array_equal(diag["scores"], want_scores)
+
+
+def test_default_scheduler_tie_breaks_to_first_node():
+    """Exact score ties resolve to the lowest node index, as the legacy
+    running-max loop did."""
+    nodes = [Node("twin-0", "B", vcpus=4, mem_gb=8),
+             Node("twin-1", "B", vcpus=4, mem_gb=8),
+             Node("twin-2", "B", vcpus=4, mem_gb=8)]
+    idx, diag = DefaultK8sScheduler().select(pod("medium"), nodes)
+    assert idx == 0
+    assert diag["scores"][0] == diag["scores"][1] == diag["scores"][2]
+
+
+def test_default_scheduler_accepts_node_table():
+    """select works on a prebuilt NodeTable snapshot (no Node list)."""
+    from repro.cluster.node import NodeTable
+    nodes = make_paper_cluster()
+    table = NodeTable.from_nodes(nodes)
+    i_list, d_list = DefaultK8sScheduler().select(pod("light"), nodes)
+    i_tab, d_tab = DefaultK8sScheduler().select(pod("light"), table)
+    assert i_list == i_tab
+    np.testing.assert_array_equal(d_list["scores"], d_tab["scores"])
+
+
 def test_node_bind_release_roundtrip():
     n = make_paper_cluster()[1]
     free0 = (n.free_cpu, n.free_mem)
