@@ -9,6 +9,7 @@ from typing import Sequence
 
 import numpy as np
 
+from repro.core.carbon import DEFAULT_REGIONS
 from repro.core.energy import NODE_ENERGY_PROFILES
 
 
@@ -23,6 +24,9 @@ class Node:
     reserved_mem: float = 0.0
     used_cpu: float = 0.0
     used_mem: float = 0.0
+    # grid region the node draws power from (carbon-aware stack,
+    # repro.core.carbon); the paper's cluster keeps the single "default"
+    region: str = "default"
 
     @property
     def speed(self) -> float:
@@ -82,6 +86,13 @@ class NodeTable:
     speed: np.ndarray
     dyn_power_per_vcpu: np.ndarray
     idle_power: np.ndarray
+    # grid region per node (carbon column lookups); defaults to "default"
+    # everywhere for tables built before the carbon stack existed
+    region: list[str] = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        if not self.region:
+            self.region = ["default"] * len(self.names)
 
     @classmethod
     def from_nodes(cls, nodes: Sequence[Node]) -> "NodeTable":
@@ -99,6 +110,7 @@ class NodeTable:
             speed=f64([p["speed"] for p in prof]),
             dyn_power_per_vcpu=f64([p["dyn_power_per_vcpu"] for p in prof]),
             idle_power=f64([p["idle_power"] for p in prof]),
+            region=[n.region for n in nodes],
         )
 
     def __len__(self) -> int:
@@ -135,10 +147,12 @@ NODE_CAPS: dict[str, tuple[float, float]] = {
 CAP_SCALES = (1, 2, 4)
 
 
-def make_fleet(n: int, seed: int = 0, utilization: float = 0.0) -> NodeTable:
+def make_fleet(n: int, seed: int = 0, utilization: float = 0.0,
+               regions: Sequence[str] = DEFAULT_REGIONS) -> NodeTable:
     """Synthetic heterogeneous fleet of ``n`` nodes for benchmarks/examples:
     the paper's Table-I node classes replicated with jittered capacities and
-    (optionally) random pre-existing load."""
+    (optionally) random pre-existing load. Nodes are spread round-robin
+    across ``regions`` (inert unless a carbon signal is attached)."""
     rng = np.random.default_rng(seed)
     classes = list(NODE_CAPS)
     nodes = []
@@ -146,7 +160,8 @@ def make_fleet(n: int, seed: int = 0, utilization: float = 0.0) -> NodeTable:
         cls_i = classes[int(rng.integers(len(classes)))]
         vcpus, mem = NODE_CAPS[cls_i]
         scale = float(rng.choice(CAP_SCALES))
-        nodes.append(Node(f"node-{i:05d}", cls_i, vcpus * scale, mem * scale))
+        nodes.append(Node(f"node-{i:05d}", cls_i, vcpus * scale, mem * scale,
+                          region=regions[i % len(regions)]))
     table = NodeTable.from_nodes(nodes)
     if utilization > 0.0:
         u = rng.uniform(0.0, min(2.0 * utilization, 0.95), n)
@@ -165,7 +180,9 @@ SCENARIO_PROFILES: dict[str, dict[str, float]] = {
 }
 
 
-def make_scenario_cluster(profile: str, n: int, seed: int = 0) -> list[Node]:
+def make_scenario_cluster(profile: str, n: int, seed: int = 0,
+                          regions: Sequence[str] = DEFAULT_REGIONS
+                          ) -> list[Node]:
     """Scenario fleet for the event-driven engine: ``n`` mutable ``Node``
     objects (4 ≤ n ≤ 8192) whose class mix follows ``SCENARIO_PROFILES``.
 
@@ -173,9 +190,11 @@ def make_scenario_cluster(profile: str, n: int, seed: int = 0) -> list[Node]:
     (every fleet keeps the paper's heterogeneity axis; unlike
     :func:`make_paper_cluster`, no system reservations on the default
     node); the rest are drawn from the profile's mix with the capacity
-    jitter of :func:`make_fleet`. Deterministic in ``seed`` — scenario
-    runs replay exactly. Burst scoring converts these to a
-    :class:`NodeTable` snapshot per round (``BatchScheduler.select_many``).
+    jitter of :func:`make_fleet`. Nodes are spread round-robin across
+    ``regions`` (drives the carbon column when a signal is attached;
+    inert otherwise). Deterministic in ``seed`` — scenario runs replay
+    exactly. Burst scoring converts these to a :class:`NodeTable`
+    snapshot per round (``BatchScheduler.select_many``).
     """
     if profile not in SCENARIO_PROFILES:
         raise ValueError(f"unknown profile {profile!r}; "
@@ -193,7 +212,8 @@ def make_scenario_cluster(profile: str, n: int, seed: int = 0) -> list[Node]:
         vcpus, mem = NODE_CAPS[cls_i]
         scale = 1.0 if i < 4 else float(rng.choice(CAP_SCALES))
         nodes.append(Node(f"{profile}-{i:05d}", cls_i,
-                          vcpus * scale, mem * scale))
+                          vcpus * scale, mem * scale,
+                          region=regions[i % len(regions)]))
     return nodes
 
 

@@ -17,15 +17,28 @@ running pod completes or a new burst arrives. With ``PaperArrivals`` this
 reduces exactly to the legacy all-at-t0 loop — ``table6()`` reproduces the
 pre-refactor paper-mode output bitwise (tests/test_scenarios.py pins it
 against the recorded golden).
+
+Carbon-aware temporal shifting (``carbon=CarbonPolicy(...)``) adds two
+event kinds on top: *deferral* — a deferrable pod waits, bounded by its
+deadline, for the fleet-minimum grid intensity to dip below the policy
+threshold, with carbon-check wake events at the policy cadence (and always
+exactly at a waiting pod's deadline) — and *preemption* — a running
+deferrable task is evicted and requeued (at most once, never past its
+deadline) when its node's regional intensity spikes above the preemption
+threshold; its power-timeline segment is truncated at the eviction instant
+so the energy/carbon interval splits between the partial and requeued runs.
+Without a policy the loop is byte-for-byte the legacy one.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
+import math
 from typing import Callable
 
 import numpy as np
 
+from repro.core.carbon import CarbonPolicy
 from repro.core.energy import (NODE_ENERGY_PROFILES, PowerTimeline,
                                task_energy_joules)
 from repro.core.scheduler import (BatchScheduler, DefaultK8sScheduler,
@@ -43,6 +56,7 @@ class PodRecord:
     runtime_s: float
     energy_j: float
     scheduling_time_s: float
+    arrival_s: float = 0.0      # burst arrival time (deferral latency basis)
 
 
 @dataclasses.dataclass
@@ -50,6 +64,7 @@ class SimResult:
     records: list[PodRecord]
     unschedulable: int
     timeline: PowerTimeline | None = None
+    preemptions: int = 0
 
     def _timeline(self) -> PowerTimeline:
         """The run's power timeline (rebuilt from records for results
@@ -80,24 +95,59 @@ class SimResult:
         """Piecewise-constant total power ``(edges_s, watts)``."""
         return self._timeline().power_series(scheduler)
 
+    def total_carbon_g(self, scheduler: str | None = None) -> float:
+        """Operational carbon (gCO2) off the power timeline — requires the
+        run to have had a CarbonPolicy (signal attached to the timeline)."""
+        return self._timeline().total_carbon_g(scheduler)
+
+    def carbon_series(self, scheduler: str | None = None):
+        """Time-resolved cumulative carbon ``(edges_s, grams)``."""
+        return self._timeline().carbon_series(scheduler)
+
+    def mean_deferral_latency_s(self, scheduler: str | None = None) -> float:
+        """Mean wait between arrival and *first* start over deferrable pods
+        (a preempted pod's requeued record does not reset its latency)."""
+        first: dict[int, PodRecord] = {}
+        for r in self.records:
+            if not r.pod.deferrable:
+                continue
+            if scheduler is not None and r.pod.scheduler != scheduler:
+                continue
+            cur = first.get(r.pod.uid)
+            if cur is None or r.start_s < cur.start_s:
+                first[r.pod.uid] = r
+        if not first:
+            return 0.0
+        return float(np.mean([r.start_s - r.arrival_s
+                              for r in first.values()]))
+
     def mean_energy_kj(self, scheduler: str) -> float:
         """Per-pod average energy — the unit of paper Table VI (its kJ values
         decrease from low→high competition while pod counts grow ~3x, which is
-        only consistent with a per-pod average)."""
-        n = sum(1 for r in self.records if r.pod.scheduler == scheduler)
+        only consistent with a per-pod average). A preempted pod has one
+        record per run attempt but counts once."""
+        n = len({r.pod.uid for r in self.records
+                 if r.pod.scheduler == scheduler})
         return self.energy_kj(scheduler) / n if n else 0.0
 
     def mean_sched_time_ms(self, scheduler: str) -> float:
+        """Mean scheduling time per *attempt* (a preempted pod's requeued
+        placement is a real second scheduling decision)."""
         ts = [r.scheduling_time_s for r in self.records
               if r.pod.scheduler == scheduler]
         return 1000.0 * float(np.mean(ts)) if ts else 0.0
 
     def mean_exec_time_s(self, scheduler: str) -> float:
-        ts = [r.runtime_s for r in self.records if r.pod.scheduler == scheduler]
-        return float(np.mean(ts)) if ts else 0.0
+        """Mean total time-on-cluster per pod (a preempted pod's truncated
+        partial run and its rerun sum into one pod's total)."""
+        totals: dict[int, float] = {}
+        for r in self.records:
+            if r.pod.scheduler == scheduler:
+                totals[r.pod.uid] = totals.get(r.pod.uid, 0.0) + r.runtime_s
+        return float(np.mean(list(totals.values()))) if totals else 0.0
 
     def unschedulable_rate(self) -> float:
-        total = len(self.records) + self.unschedulable
+        total = len({r.pod.uid for r in self.records}) + self.unschedulable
         return self.unschedulable / total if total else 0.0
 
     def allocation(self, scheduler: str) -> dict[str, int]:
@@ -110,42 +160,64 @@ class SimResult:
 
 def _commit(pod: Pod, idx: int, nodes: list[Node], t: float,
             sched_time_s: float, records: list[PodRecord],
-            running: list, timeline: PowerTimeline) -> None:
+            running: list, timeline: PowerTimeline,
+            arrival_s: float = 0.0) -> None:
     """Bind pod to nodes[idx], append its record + completion event, and
-    post the task segment to the power timeline."""
+    post the task segment to the power timeline. The running-heap entry
+    carries the record and segment indices so a preemption can truncate
+    both at the eviction instant."""
     node = nodes[idx]
     node.bind(pod.cpu, pod.mem)
     rt = predict_exec_time(pod, node)
     ej = task_energy_joules(node.node_class, rt, pod.cpu)
     records.append(PodRecord(pod, node.name, node.node_class, t, rt,
-                             ej, sched_time_s))
+                             ej, sched_time_s, arrival_s))
     timeline.add(node.name, node.node_class, pod.scheduler, t, rt,
                  NODE_ENERGY_PROFILES[node.node_class]["dyn_power_per_vcpu"]
                  * pod.cpu)
-    heapq.heappush(running, (t + rt, pod.uid, pod, idx))
+    heapq.heappush(running, (t + rt, pod.uid, pod, idx,
+                             len(records) - 1, len(timeline.segments) - 1))
+
+
+def _pop_release(running: list, nodes: list[Node]) -> float:
+    """Pop the earliest completion, release its resources, return its end
+    time (the backoff/retry step)."""
+    end_t, _, done, idx, _, _ = heapq.heappop(running)
+    nodes[idx].release(done.cpu, done.mem)
+    return end_t
 
 
 def run_burst(pods: list[Pod], nodes: list[Node], sched: BatchScheduler,
               t: float, records: list[PodRecord], running: list,
-              timeline: PowerTimeline) -> list[Pod]:
+              timeline: PowerTimeline,
+              arrive: dict[int, float] | None = None,
+              block: dict[int, int] | None = None) -> list[Pod]:
     """Schedule an arrival burst through one batched scoring pass
     (``BatchScheduler.select_many``) and commit the assignments. Returns
-    the pods that did not fit."""
-    assignments, diag = sched.select_many(pods, nodes)
+    the pods that did not fit. ``block`` maps pod uid -> a node index the
+    pod must not be committed to this round (the node it was just
+    preempted off — an instant same-node restart would discard the partial
+    run for nothing); the exclusion happens inside ``select_many``'s
+    greedy ledger, so a blocked top choice falls through to the pod's
+    next-ranked node without charging phantom capacity."""
+    blocked = [block.get(p.uid) for p in pods] if block else None
+    assignments, diag = sched.select_many(pods, nodes, now=t,
+                                          blocked=blocked)
     still: list[Pod] = []
     for pod, idx in zip(pods, assignments):
         if idx is None:
             still.append(pod)
             continue
         _commit(pod, idx, nodes, t, diag["per_pod_time_s"], records, running,
-                timeline)
+                timeline, arrival_s=(arrive or {}).get(pod.uid, 0.0))
     return still
 
 
 def run_scenario(arrivals: ArrivalProcess, scheme: str,
                  cluster_factory: Callable[[], list[Node]] = make_paper_cluster,
                  adaptive: bool = False, batch: bool = False,
-                 batch_backend: str = "jax") -> SimResult:
+                 batch_backend: str = "jax",
+                 carbon: CarbonPolicy | None = None) -> SimResult:
     """Drive one scenario through the event-driven engine.
 
     Events are pod-arrival bursts (from ``arrivals``) and task completions
@@ -159,77 +231,182 @@ def run_scenario(arrivals: ArrivalProcess, scheme: str,
     retrying, the legacy backoff step) or the next arrival burst. Pods
     still pending when no completion or arrival can ever free capacity are
     counted unschedulable.
+
+    With a ``carbon`` policy the engine additionally (1) attaches the
+    policy's signal to the TOPSIS schedulers (sixth carbon-rate criterion)
+    and to the run's power timeline (carbon accounting); (2) *defers*
+    deferrable pods while the fleet-minimum intensity exceeds
+    ``carbon.defer_threshold`` — bounded by each pod's deadline — waking at
+    ``carbon.check_interval_s`` cadence and exactly at deadlines; and (3)
+    *preempts* a running deferrable task (at most once per pod, never past
+    its deadline) when its node's regional intensity exceeds
+    ``carbon.preempt_threshold``, truncating its timeline segment and
+    requeueing it as pending. Deferred pods are never counted
+    unschedulable while a wake event is still due.
     """
     nodes = cluster_factory()
+    csig = carbon.signal if carbon is not None else None
     sched = {"topsis": (BatchScheduler(scheme, adaptive=adaptive,
-                                       backend=batch_backend) if batch
-                        else GreenPodScheduler(scheme, adaptive=adaptive)),
+                                       backend=batch_backend,
+                                       carbon_signal=csig) if batch
+                        else GreenPodScheduler(scheme, adaptive=adaptive,
+                                               carbon_signal=csig)),
              "default": DefaultK8sScheduler()}
     events = sorted(arrivals.events(), key=lambda ev: ev[0])
     ei = 0
     pending: list[Pod] = []
-    running: list[tuple[float, int, Pod, int]] = []   # (end_t, uid, pod, node_i)
+    # running heap entries: (end_t, uid, pod, node_i, record_i, segment_i)
+    running: list[tuple] = []
     records: list[PodRecord] = []
-    timeline = PowerTimeline()
+    timeline = PowerTimeline(
+        carbon_signal=csig,
+        node_region={n.name: n.region for n in nodes} if carbon else None)
+    fleet_regions = sorted({n.region for n in nodes})
+    arrive: dict[int, float] = {}      # uid -> burst arrival time
+    preempted: set[int] = set()        # uids evicted once already
+    evict_block: dict[int, tuple[int, float]] = {}   # uid -> (node_i, t_evict)
+    n_preempt = 0
     t = 0.0
     unschedulable = 0
+
+    def _deadline(pod: Pod) -> float:
+        return arrive.get(pod.uid, 0.0) + pod.deadline_s
+
     while True:
         # ingest every burst due by the current clock
         while ei < len(events) and events[ei][0] <= t:
+            for p in events[ei][1]:
+                if carbon is not None and p.deferrable and not (
+                        math.isfinite(p.deadline_s) and p.deadline_s > 0.0):
+                    # an unbounded deadline would let the wake loop spin
+                    # forever under a never-dipping signal
+                    raise ValueError(
+                        f"deferrable pod {p.uid} needs a finite positive "
+                        f"deadline_s, got {p.deadline_s}")
+                arrive.setdefault(p.uid, events[ei][0])
             pending.extend(events[ei][1])
             ei += 1
         # safety net: release anything that finished before now (the advance
         # step below never moves the clock past an unreleased completion)
         while running and running[0][0] < t:
-            _, _, done, idx = heapq.heappop(running)
-            nodes[idx].release(done.cpu, done.mem)
+            _pop_release(running, nodes)
         if not pending and not running and ei >= len(events):
             break
-        # scheduling round: place what fits, FIFO retry for the rest
+        # preemption event: evict running deferrable tasks whose node's
+        # regional intensity spiked above the threshold (once per pod,
+        # never past its deadline); truncate their ledger entries at t and
+        # requeue them — they re-enter this round's pending queue and
+        # either migrate to a cleaner region or defer for a dip. A victim
+        # is blocked from the node it was evicted off for as long as the
+        # clock stays at the eviction instant — an instant same-node
+        # restart would discard the partial run for nothing, and rounds
+        # can repeat at one t via the backoff step — and may return there
+        # once time advances.
+        if carbon is not None and carbon.preempt_threshold is not None:
+            victims = [e for e in running
+                       if e[0] > t and e[2].deferrable
+                       and e[2].uid not in preempted and t < _deadline(e[2])
+                       and carbon.signal.intensity(nodes[e[3]].region, t)
+                       > carbon.preempt_threshold]
+            if victims:
+                gone = {e[1] for e in victims}
+                running = [e for e in running if e[1] not in gone]
+                heapq.heapify(running)
+                for _, uid, pod, idx, rec_i, seg_i in victims:
+                    nodes[idx].release(pod.cpu, pod.mem)
+                    rec = records[rec_i]
+                    elapsed = t - rec.start_s
+                    rec.runtime_s = elapsed
+                    rec.energy_j = (timeline.segments[seg_i].dyn_power_w
+                                    * elapsed)
+                    timeline.truncate(seg_i, t)
+                    preempted.add(uid)
+                    evict_block[uid] = (idx, t)
+                    pending.append(pod)
+                    n_preempt += 1
+        blocked_now = {uid: idx for uid, (idx, tt) in evict_block.items()
+                       if tt == t}
+        # scheduling round: place what fits, FIFO retry for the rest;
+        # deferrable pods sit out while the fleet-wide carbon dip test
+        # fails and their deadline is still ahead
+        defer_now = False
+        if carbon is not None and any(p.deferrable for p in pending):
+            defer_now = (carbon.signal.fleet_min(fleet_regions, t)
+                         > carbon.defer_threshold)
+        deferred: list[Pod] = []
         placed: set[int] = set()
         burst: list[Pod] = []
         for pod in pending:
+            if defer_now and pod.deferrable and t < _deadline(pod) - 1e-12:
+                deferred.append(pod)
+                continue
             if batch and pod.scheduler == "topsis":
                 burst.append(pod)
                 continue
-            idx, diag = sched[pod.scheduler].select(pod, nodes)
+            idx, diag = sched[pod.scheduler].select(pod, nodes, now=t)
             if idx is None:
                 continue
+            if blocked_now.get(pod.uid) == idx:
+                deferred.append(pod)      # blocked instant same-node restart
+                continue
             _commit(pod, idx, nodes, t, diag["scheduling_time_s"], records,
-                    running, timeline)
+                    running, timeline, arrival_s=arrive.get(pod.uid, 0.0))
             placed.add(pod.uid)
         if burst:
             b_still = run_burst(burst, nodes, sched["topsis"], t,
-                                records, running, timeline)
+                                records, running, timeline, arrive,
+                                block=blocked_now)
             placed.update({p.uid for p in burst} - {p.uid for p in b_still})
         pending = [p for p in pending if p.uid not in placed]
-        # advance the clock to the next event
+        # evicted-but-unplaced victims wait like deferred pods (guarantees
+        # a wake event so they retry; the block lapses once t advances)
+        in_deferred = {p.uid for p in deferred}
+        deferred.extend(p for p in pending
+                        if p.uid in blocked_now and p.uid not in in_deferred)
+        # advance the clock to the next event: completion, arrival burst,
+        # or carbon-check wake (while pods defer or preemptable tasks run)
         next_arrival = events[ei][0] if ei < len(events) else None
         next_completion = running[0][0] if running else None
-        if pending and next_completion is not None and (
-                next_arrival is None or next_completion <= next_arrival):
+        next_wake = None
+        if carbon is not None:
+            cands = [_deadline(p) for p in deferred]
+            if deferred:
+                cands.append(t + carbon.check_interval_s)
+            if carbon.preempt_threshold is not None and any(
+                    e[0] > t and e[2].deferrable and e[1] not in preempted
+                    and t < _deadline(e[2]) for e in running):
+                cands.append(t + carbon.check_interval_s)
+            cands = [c for c in cands if c > t]
+            if cands:
+                next_wake = min(cands)
+        if pending and next_completion is not None \
+                and (next_arrival is None or next_completion <= next_arrival) \
+                and (next_wake is None or next_completion <= next_wake):
             # backoff step: free exactly one completed pod, then retry
-            end_t, _, done, idx = heapq.heappop(running)
-            nodes[idx].release(done.cpu, done.mem)
-            t = end_t
+            t = _pop_release(running, nodes)
             continue
-        if next_arrival is not None:
+        if next_arrival is not None and (next_wake is None
+                                         or next_arrival <= next_wake):
             if next_completion is not None and next_completion <= next_arrival:
                 # release completions due at-or-before the arrival (one per
                 # iteration) so the burst schedules against freed capacity —
                 # including the exact completion==arrival tie
-                end_t, _, done, idx = heapq.heappop(running)
-                nodes[idx].release(done.cpu, done.mem)
-                t = end_t
+                t = _pop_release(running, nodes)
                 continue
             t = next_arrival
+            continue
+        if next_wake is not None:
+            if next_completion is not None and next_completion <= next_wake:
+                t = _pop_release(running, nodes)
+                continue
+            t = next_wake
             continue
         if pending:
             # no completions left, no future arrivals: nothing can ever fit
             unschedulable += len(pending)
             break
         break   # only running tasks remain; their records are complete
-    return SimResult(records, unschedulable, timeline)
+    return SimResult(records, unschedulable, timeline, preemptions=n_preempt)
 
 
 def run_experiment(level: str, scheme: str,

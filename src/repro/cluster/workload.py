@@ -6,6 +6,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import json
+import math
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,6 +35,13 @@ class Pod:
     uid: int
     workload: WorkloadSpec
     scheduler: str        # "topsis" | "default"
+    # Carbon-aware temporal shifting (repro.core.carbon): a deferrable pod
+    # may wait for a grid-carbon dip before scheduling — but never more than
+    # deadline_s past its arrival — and may be preempted+requeued (once)
+    # when its node's regional intensity spikes. Inert without a
+    # CarbonPolicy on the run.
+    deferrable: bool = False
+    deadline_s: float = 600.0     # relative to arrival; must stay finite
 
     @property
     def cpu(self) -> float:
@@ -120,7 +128,8 @@ class PoissonArrivals(ArrivalProcess):
 
     def __init__(self, rate_per_s: float = 0.2, n_bursts: int = 10,
                  burst_size: int = 4, mix: dict[str, float] | None = None,
-                 topsis_share: float = 0.5, seed: int = 0):
+                 topsis_share: float = 0.5, seed: int = 0,
+                 deferrable_share: float = 0.0, deadline_s: float = 600.0):
         if rate_per_s <= 0:
             raise ValueError("rate_per_s must be positive")
         self.rate_per_s = rate_per_s
@@ -130,6 +139,17 @@ class PoissonArrivals(ArrivalProcess):
         if any(k not in WORKLOADS for k in self.mix):
             raise ValueError(f"unknown workload kind in mix: {self.mix}")
         self.topsis_share = topsis_share
+        # carbon-aware temporal shifting: each pod is deferrable with this
+        # probability; at 0.0 (default) the RNG stream is untouched, so
+        # pre-carbon scenarios replay bitwise
+        if not 0.0 <= deferrable_share <= 1.0:
+            raise ValueError(f"deferrable_share must be in [0, 1], "
+                             f"got {deferrable_share}")
+        if not (math.isfinite(deadline_s) and deadline_s > 0.0):
+            raise ValueError(f"deadline_s must be finite and positive, "
+                             f"got {deadline_s}")
+        self.deferrable_share = deferrable_share
+        self.deadline_s = deadline_s
         self.seed = seed
 
     def events(self):
@@ -147,7 +167,10 @@ class PoissonArrivals(ArrivalProcess):
                 Pod(next(uid),
                     WORKLOADS[kinds[int(rng.choice(len(kinds), p=probs))]],
                     "topsis" if rng.uniform() < self.topsis_share
-                    else "default")
+                    else "default",
+                    deferrable=(self.deferrable_share > 0.0
+                                and rng.uniform() < self.deferrable_share),
+                    deadline_s=self.deadline_s)
                 for _ in range(self.burst_size)
             ]
             out.append((t, burst))
@@ -156,22 +179,56 @@ class PoissonArrivals(ArrivalProcess):
 
 class TraceArrivals(ArrivalProcess):
     """Replayable arrival trace: a list of ``{"t": float, "kind": str,
-    "scheduler": "topsis"|"default", "count": int}`` entries (count
-    defaults to 1), e.g. loaded from a JSON file via :meth:`from_file`.
-    Entries sharing one ``t`` form one burst; bursts are emitted in
-    time-sorted order, entry order preserved within a burst — so a trace
-    replays to the identical pod stream every run.
+    "scheduler": "topsis"|"default", "count": int, "deferrable": bool,
+    "deadline_s": float}`` entries (count defaults to 1, deferrable to
+    False, deadline_s to the Pod default), e.g. loaded from a JSON file via
+    :meth:`from_file`. Entries sharing one ``t`` form one burst; bursts are
+    emitted in time-sorted order, entry order preserved within a burst — so
+    a trace replays to the identical pod stream every run.
+
+    Every entry is validated up front with a message naming the offending
+    entry — a malformed trace fails at construction, not deep inside the
+    event engine.
     """
 
     def __init__(self, entries: "list[dict]"):
         self.entries = list(entries)
-        for e in self.entries:
-            if "t" not in e or float(e["t"]) < 0.0:
-                raise ValueError(f"trace entry needs a non-negative 't': {e}")
-            if e["kind"] not in WORKLOADS:
-                raise ValueError(f"unknown workload kind {e['kind']!r}")
+        for i, e in enumerate(self.entries):
+            where = f"trace entry {i} ({e!r})"
+            if not isinstance(e, dict):
+                raise ValueError(f"{where}: expected an object with at "
+                                 f"least 't' and 'kind' fields")
+            try:
+                t_ok = math.isfinite(float(e["t"])) and float(e["t"]) >= 0.0
+            except (KeyError, TypeError, ValueError):
+                t_ok = False
+            if not t_ok:
+                raise ValueError(f"{where}: needs a finite non-negative "
+                                 f"arrival time 't'")
+            if e.get("kind") not in WORKLOADS:
+                raise ValueError(
+                    f"{where}: unknown workload kind {e.get('kind')!r}; "
+                    f"choose from {sorted(WORKLOADS)}")
             if e.get("scheduler", "topsis") not in ("topsis", "default"):
-                raise ValueError(f"unknown scheduler {e['scheduler']!r}")
+                raise ValueError(
+                    f"{where}: unknown scheduler {e['scheduler']!r}; "
+                    f"choose 'topsis' or 'default'")
+            count = e.get("count", 1)
+            try:
+                count_ok = int(count) == count and int(count) > 0
+            except (TypeError, ValueError):
+                count_ok = False
+            if not count_ok:
+                raise ValueError(f"{where}: 'count' must be a positive "
+                                 f"integer, got {count!r}")
+            ddl = e.get("deadline_s", 1.0)
+            try:
+                ddl_ok = math.isfinite(float(ddl)) and float(ddl) > 0.0
+            except (TypeError, ValueError):
+                ddl_ok = False
+            if not ddl_ok:
+                raise ValueError(f"{where}: 'deadline_s' must be finite "
+                                 f"and positive, got {ddl!r}")
 
     @classmethod
     def from_file(cls, path: str) -> "TraceArrivals":
@@ -183,7 +240,12 @@ class TraceArrivals(ArrivalProcess):
         by_t: dict[float, list[Pod]] = {}
         for e in sorted(self.entries, key=lambda e: float(e["t"])):
             pods = by_t.setdefault(float(e["t"]), [])
+            kw = {}
+            if "deferrable" in e:
+                kw["deferrable"] = bool(e["deferrable"])
+            if "deadline_s" in e:
+                kw["deadline_s"] = float(e["deadline_s"])
             for _ in range(int(e.get("count", 1))):
                 pods.append(Pod(next(uid), WORKLOADS[e["kind"]],
-                                e.get("scheduler", "topsis")))
+                                e.get("scheduler", "topsis"), **kw))
         return sorted(by_t.items())

@@ -7,6 +7,16 @@ The five GreenPod criteria, in canonical column order:
   2 cores           (benefit) — available processing cores after placement
   3 memory          (benefit) — available memory after placement
   4 balance         (benefit) — resource balance (1 - |cpu_util - mem_util|)
+
+The carbon-aware stack (beyond-paper; repro.core.carbon) appends a sixth:
+
+  5 carbon_rate     (cost)    — node power draw x grid carbon intensity of
+                                the node's region at decision time
+
+``greenpod_criteria(carbon=...)`` selects the 5- or 6-criteria tuple; with
+the carbon weight at zero the 6-criteria TOPSIS ranking is bitwise identical
+to the legacy 5-criteria one (a zero-weight column contributes exactly 0 to
+every distance), which is what keeps paper-mode reproduction intact.
 """
 from __future__ import annotations
 
@@ -32,6 +42,26 @@ GREENPOD_CRITERIA: tuple[Criterion, ...] = (
 
 CRITERIA_NAMES: tuple[str, ...] = tuple(c.name for c in GREENPOD_CRITERIA)
 N_CRITERIA = len(GREENPOD_CRITERIA)
+
+# Sixth criterion (carbon-aware stack): instantaneous emission rate of the
+# placement — the task's power draw on the candidate node (dynamic power for
+# its vCPUs, plus the idle power a placement on a sleeping node newly wakes)
+# times the node region's grid intensity at decision time. A cost criterion:
+# the scheduler steers work toward currently-clean regions.
+CARBON_CRITERION = Criterion(
+    "carbon_rate", False,
+    "node power draw x regional grid intensity (W * gCO2/kWh) at decision "
+    "time")
+
+GREENPOD_CRITERIA_CARBON: tuple[Criterion, ...] = (
+    GREENPOD_CRITERIA + (CARBON_CRITERION,))
+N_CRITERIA_CARBON = len(GREENPOD_CRITERIA_CARBON)
+
+
+def greenpod_criteria(carbon: bool = False) -> tuple[Criterion, ...]:
+    """The decision-matrix column tuple: 5 paper criteria, or 6 with the
+    carbon-rate criterion appended (when a carbon signal is attached)."""
+    return GREENPOD_CRITERIA_CARBON if carbon else GREENPOD_CRITERIA
 
 
 def benefit_mask(criteria=GREENPOD_CRITERIA) -> np.ndarray:

@@ -93,11 +93,25 @@ def predicted_task_energy_joules_np(dyn_power_per_vcpu, idle_power,
     All arguments broadcast (numpy arrays or scalars); ``awake`` is a bool
     mask. Same arithmetic and operand order as the scalar form, so the two
     agree bitwise on float64 inputs — the batched scheduler's decision
-    matrix must rank identically to the per-pod path.
+    matrix must rank identically to the per-pod path. (This is
+    :func:`predicted_power_w_np` x runtime, kept in the legacy operand
+    order for bitwise golden stability.)
     """
     import numpy as np
     e = dyn_power_per_vcpu * cpu_request * runtime_s
     return e + np.where(awake, 0.0, idle_power * runtime_s)
+
+
+def predicted_power_w_np(dyn_power_per_vcpu, idle_power, cpu_request, awake):
+    """Marginal power draw (W) of a placement, vectorized over node
+    columns: dynamic power for the requested vCPUs plus — if the node is
+    asleep — the idle power the placement newly wakes. The single source
+    of the marginal-power rule; the carbon-rate criterion is this times
+    grid intensity, and :func:`predicted_task_energy_joules_np` is this
+    times runtime."""
+    import numpy as np
+    return dyn_power_per_vcpu * cpu_request + np.where(awake, 0.0,
+                                                       idle_power)
 
 
 # --- Per-node power-state timeline (event-driven simulator) -----------------
@@ -158,15 +172,35 @@ class PowerTimeline:
     scheduler's tasks keep it awake — while :meth:`power_series` /
     :meth:`energy_series` expose the same ledger as time-resolved
     piecewise-constant power and cumulative energy, per scheduler.
+
+    Carbon accounting (``carbon_signal`` + per-node ``node_region``
+    attached): every constant-power piece of the ledger is integrated
+    against its region's time-varying grid intensity —
+    :meth:`total_carbon_g` and :meth:`carbon_series` are exact (the signal
+    supplies analytic interval integrals), not time-stepped. A preempted
+    task's segment is cut at the eviction instant via :meth:`truncate`, so
+    its energy/carbon interval splits between the partial run and the
+    requeued one.
     """
 
-    def __init__(self, segments: list[PowerSegment] | None = None):
+    def __init__(self, segments: list[PowerSegment] | None = None,
+                 carbon_signal=None,
+                 node_region: "dict[str, str] | None" = None):
         self.segments: list[PowerSegment] = list(segments or [])
+        self.carbon_signal = carbon_signal
+        self.node_region: dict[str, str] = dict(node_region or {})
 
     def add(self, node: str, node_class: str, scheduler: str, start_s: float,
             runtime_s: float, dyn_power_w: float) -> None:
         self.segments.append(PowerSegment(node, node_class, scheduler,
                                           start_s, runtime_s, dyn_power_w))
+
+    def truncate(self, index: int, end_s: float) -> None:
+        """Cut segment ``index`` short at ``end_s`` (task preempted): its
+        dynamic power and the node-awake attribution both stop there."""
+        seg = self.segments[index]
+        self.segments[index] = dataclasses.replace(
+            seg, runtime_s=max(end_s - seg.start_s, 0.0))
 
     def _segs(self, scheduler: str | None) -> list[PowerSegment]:
         if scheduler is None:
@@ -234,6 +268,71 @@ class PowerTimeline:
             return edges, np.zeros(0)
         return edges, np.concatenate(
             [[0.0], np.cumsum(watts * np.diff(edges))])
+
+    # --- carbon accounting (power x grid intensity over the timeline) -------
+    def _require_signal(self):
+        if self.carbon_signal is None:
+            raise ValueError(
+                "timeline has no carbon signal attached; construct "
+                "PowerTimeline(carbon_signal=..., node_region=...) or run "
+                "the scenario with a CarbonPolicy")
+
+    def _power_pieces(self, scheduler: str | None = None
+                      ) -> "list[tuple[float, float, float, str]]":
+        """The ledger as constant-power pieces ``(start, end, watts, node)``:
+        one dynamic piece per task segment plus one idle piece per merged
+        busy interval per node — the exact decomposition ``energy_kj``
+        sums, exposed for intensity-weighted integration."""
+        segs = self._segs(scheduler)
+        pieces = [(s.start_s, s.end_s, s.dyn_power_w, s.node)
+                  for s in segs if s.runtime_s > 0.0]
+        classes = {s.node: s.node_class for s in segs}
+        for node, ivs in self.busy_intervals(scheduler).items():
+            p = NODE_ENERGY_PROFILES[classes[node]]["idle_power"]
+            pieces.extend((lo, hi, p, node)
+                          for lo, hi in merge_intervals(ivs) if hi > lo)
+        return pieces
+
+    def region_of(self, node: str) -> str:
+        return self.node_region.get(node, "default")
+
+    def total_carbon_g(self, scheduler: str | None = None) -> float:
+        """Operational carbon (grams CO2) attributed to a scheduler:
+        ∫ power x intensity dt over every piece of the ledger, using the
+        signal's exact interval integrals."""
+        from repro.core.carbon import J_PER_KWH
+        self._require_signal()
+        sig = self.carbon_signal
+        return sum(p * sig.integral(self.region_of(node), lo, hi)
+                   for lo, hi, p, node in self._power_pieces(scheduler)
+                   ) / J_PER_KWH
+
+    def carbon_series(self, scheduler: str | None = None):
+        """Cumulative carbon over time: ``(edges, grams)`` with ``grams[k]``
+        the CO2 emitted up to ``edges[k]`` (``grams[0]`` is 0; the final
+        value equals :meth:`total_carbon_g` up to summation order). Edges
+        are the power-state change points; within each edge interval the
+        power is constant and the intensity integral is exact."""
+        import numpy as np
+        from repro.core.carbon import J_PER_KWH
+        self._require_signal()
+        sig = self.carbon_signal
+        pieces = self._power_pieces(scheduler)
+        if not pieces:
+            return np.zeros(0), np.zeros(0)
+        edges = np.unique(np.asarray(
+            [lo for lo, _, _, _ in pieces] + [hi for _, hi, _, _ in pieces]))
+        # accumulate each piece's integral split at its own interior edges
+        # (piece endpoints are edges, so searchsorted brackets exactly) —
+        # no all-pieces scan per interval
+        delta = np.zeros(len(edges) - 1)
+        for lo, hi, p, node in pieces:
+            region = self.region_of(node)
+            i0 = int(np.searchsorted(edges, lo))
+            i1 = int(np.searchsorted(edges, hi))
+            for k in range(i0, i1):
+                delta[k] += p * sig.integral(region, edges[k], edges[k + 1])
+        return edges, np.concatenate([[0.0], np.cumsum(delta / J_PER_KWH)])
 
 
 # --- TPU fleet (beyond-paper) ----------------------------------------------

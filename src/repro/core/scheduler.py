@@ -26,10 +26,12 @@ from typing import Sequence
 import numpy as np
 
 from repro.core import topsis
-from repro.core.criteria import benefit_mask
-from repro.core.energy import (predicted_task_energy_joules,
+from repro.core.carbon import CarbonSignal
+from repro.core.criteria import benefit_mask, greenpod_criteria
+from repro.core.energy import (predicted_power_w_np,
+                               predicted_task_energy_joules,
                                predicted_task_energy_joules_np)
-from repro.core.weighting import adaptive_weights, weights_for
+from repro.core.weighting import CARBON_SCHEMES, adaptive_weights, weights_for
 from repro.cluster.node import Node, NodeTable
 from repro.cluster.workload import Pod
 
@@ -55,13 +57,17 @@ def _as_table(nodes) -> NodeTable:
     return nodes if isinstance(nodes, NodeTable) else NodeTable.from_nodes(nodes)
 
 
-def decision_matrix_table(cpu, mem, base_time_s,
-                          table: NodeTable) -> np.ndarray:
-    """(..., N, 5) GreenPod decision matrix by broadcasting over the fleet's
+def decision_matrix_table(cpu, mem, base_time_s, table: NodeTable,
+                          carbon_intensity=None) -> np.ndarray:
+    """(..., N, C) GreenPod decision matrix by broadcasting over the fleet's
     column arrays (criteria.CRITERIA_NAMES order) — no per-node Python loop.
 
-    ``cpu`` / ``mem`` / ``base_time_s`` are scalars for one pod (→ (N, 5))
-    or ``(P, 1)`` arrays for a queue (→ (P, N, 5))."""
+    ``cpu`` / ``mem`` / ``base_time_s`` are scalars for one pod (→ (N, C))
+    or ``(P, 1)`` arrays for a queue (→ (P, N, C)). C is 5, or 6 when
+    ``carbon_intensity`` (the (N,) gCO2/kWh column for the fleet's regions
+    at decision time) is given — the sixth column is the placement's
+    emission rate: power draw (dynamic for the request, plus the idle power
+    a sleeping node would newly wake) x regional intensity."""
     exec_t = base_time_s / table.speed
     energy = predicted_task_energy_joules_np(
         table.dyn_power_per_vcpu, table.idle_power, exec_t, cpu, table.awake)
@@ -74,72 +80,100 @@ def decision_matrix_table(cpu, mem, base_time_s,
         np.maximum(1.0 - mem_after, 0.0),    # memory availability
         1.0 - np.abs(cpu_after - mem_after),
     ]
+    if carbon_intensity is not None:
+        power_w = predicted_power_w_np(table.dyn_power_per_vcpu,
+                                       table.idle_power, cpu, table.awake)
+        rows.append(power_w * np.asarray(carbon_intensity, dtype=np.float64))
     return np.stack(rows, axis=-1).astype(np.float64, copy=False)
 
 
-def decision_matrix(pod: Pod, nodes) -> np.ndarray:
-    """(N, 5) decision matrix for one pod; ``nodes`` is a Node list or a
+def decision_matrix(pod: Pod, nodes, carbon_intensity=None) -> np.ndarray:
+    """(N, C) decision matrix for one pod; ``nodes`` is a Node list or a
     NodeTable."""
     table = _as_table(nodes)
     return decision_matrix_table(pod.cpu, pod.mem, pod.workload.base_time_s,
-                                 table)
+                                 table, carbon_intensity=carbon_intensity)
 
 
-def decision_matrix_batch(pods: Sequence[Pod], nodes) -> np.ndarray:
-    """(P, N, 5) decision tensor for a queue of pods against one fleet
+def decision_matrix_batch(pods: Sequence[Pod], nodes,
+                          carbon_intensity=None) -> np.ndarray:
+    """(P, N, C) decision tensor for a queue of pods against one fleet
     snapshot (every pod scored on identical cluster state)."""
     table = _as_table(nodes)
     col = lambda xs: np.asarray(xs, dtype=np.float64)[:, None]
     return decision_matrix_table(col([p.cpu for p in pods]),
                                  col([p.mem for p in pods]),
                                  col([p.workload.base_time_s for p in pods]),
-                                 table)
+                                 table, carbon_intensity=carbon_intensity)
 
 
 def _score(mat: np.ndarray, weights: np.ndarray, valid: np.ndarray,
-           backend: str) -> np.ndarray:
+           backend: str, benefit: np.ndarray = _BENEFIT) -> np.ndarray:
     """(N,) closeness for one decision matrix on the given backend
     (invalid rows are -inf)."""
     if backend == "numpy":
-        return np.asarray(topsis.closeness_np(mat, weights, _BENEFIT,
+        return np.asarray(topsis.closeness_np(mat, weights, benefit,
                                               valid).closeness)
     if backend == "jax":
-        return np.asarray(topsis.closeness(mat, weights, _BENEFIT,
+        return np.asarray(topsis.closeness(mat, weights, benefit,
                                            valid).closeness)
     if backend == "pallas":
         from repro.kernels import ops
-        return np.asarray(ops.topsis_closeness(mat, weights, _BENEFIT,
+        return np.asarray(ops.topsis_closeness(mat, weights, benefit,
                                                valid=valid))
     raise ValueError(f"unknown backend {backend!r}; choose from {BACKENDS}")
 
 
+def _check_carbon_scheme(scheme: str, carbon_signal) -> None:
+    if scheme in CARBON_SCHEMES and carbon_signal is None:
+        raise ValueError(
+            f"scheme {scheme!r} weights the carbon-rate criterion; "
+            f"construct the scheduler with a carbon_signal "
+            f"(repro.core.carbon.CarbonSignal) to use it")
+
+
 class GreenPodScheduler:
-    """TOPSIS-based multi-criteria scheduler (paper §III)."""
+    """TOPSIS-based multi-criteria scheduler (paper §III).
+
+    With a ``carbon_signal`` attached the decision matrix gains the sixth
+    carbon-rate column (node power x regional grid intensity at ``now``) and
+    weight vectors are the 6-criteria form — paper schemes carry a zero
+    carbon weight, so their rankings are bitwise unchanged."""
 
     name = "topsis"
 
     def __init__(self, scheme: str = "energy_centric", adaptive: bool = False,
-                 backend: str = "numpy"):
+                 backend: str = "numpy",
+                 carbon_signal: CarbonSignal | None = None):
+        _check_carbon_scheme(scheme, carbon_signal)
         self.scheme = scheme
         self.adaptive = adaptive
         self.backend = backend
+        self.carbon_signal = carbon_signal
+        self.criteria = greenpod_criteria(carbon=carbon_signal is not None)
+        self._benefit = benefit_mask(self.criteria)
         self.decision_log: list[dict] = []
 
     def weights(self, nodes) -> np.ndarray:
+        carbon = self.carbon_signal is not None
         if not self.adaptive:
-            return weights_for(self.scheme)
+            return weights_for(self.scheme, carbon=carbon)
         util = float(np.mean(_as_table(nodes).cpu_util))
-        return adaptive_weights(self.scheme, util)
+        return adaptive_weights(self.scheme, util, carbon=carbon)
 
-    def select(self, pod: Pod, nodes):
+    def select(self, pod: Pod, nodes, now: float = 0.0):
         t0 = time.perf_counter()
         table = _as_table(nodes)
         valid = table.fits(pod.cpu, pod.mem)
         if not valid.any():
             return None, {"reason": "unschedulable"}
+        inten = (self.carbon_signal.intensities(table.region, now)
+                 if self.carbon_signal is not None else None)
         mat = decision_matrix_table(pod.cpu, pod.mem,
-                                    pod.workload.base_time_s, table)
-        cc = _score(mat, self.weights(table), valid, self.backend)
+                                    pod.workload.base_time_s, table,
+                                    carbon_intensity=inten)
+        cc = _score(mat, self.weights(table), valid, self.backend,
+                    benefit=self._benefit)
         idx = int(np.argmax(cc))   # first max — same tie-break as a stable sort
         dt = time.perf_counter() - t0
         diag = {"closeness": cc, "scheduling_time_s": dt, "matrix": mat}
@@ -165,28 +199,39 @@ class BatchScheduler:
     name = "topsis-batch"
 
     def __init__(self, scheme: str = "energy_centric", adaptive: bool = False,
-                 backend: str = "jax"):
+                 backend: str = "jax",
+                 carbon_signal: CarbonSignal | None = None):
+        _check_carbon_scheme(scheme, carbon_signal)
         self.scheme = scheme
         self.adaptive = adaptive
         self.backend = backend
+        self.carbon_signal = carbon_signal
+        self.criteria = greenpod_criteria(carbon=carbon_signal is not None)
+        self._benefit = benefit_mask(self.criteria)
         self.decision_log: list[dict] = []
 
     def weights(self, table: NodeTable) -> np.ndarray:
+        carbon = self.carbon_signal is not None
         if not self.adaptive:
-            return weights_for(self.scheme)
-        return adaptive_weights(self.scheme, float(np.mean(table.cpu_util)))
+            return weights_for(self.scheme, carbon=carbon)
+        return adaptive_weights(self.scheme, float(np.mean(table.cpu_util)),
+                                carbon=carbon)
 
-    def score_queue(self, pods: Sequence[Pod], nodes) -> np.ndarray:
+    def score_queue(self, pods: Sequence[Pod], nodes,
+                    now: float = 0.0) -> np.ndarray:
         """(P, N) closeness matrix for the whole queue on one snapshot
-        (infeasible nodes are -inf per pod)."""
+        (infeasible nodes are -inf per pod). ``now`` is the decision time
+        the carbon column is evaluated at (ignored without a signal)."""
         table = _as_table(nodes)
-        mats = decision_matrix_batch(pods, table)
+        inten = (self.carbon_signal.intensities(table.region, now)
+                 if self.carbon_signal is not None else None)
+        mats = decision_matrix_batch(pods, table, carbon_intensity=inten)
         valid = table.fits(np.asarray([p.cpu for p in pods])[:, None],
                            np.asarray([p.mem for p in pods])[:, None])
         w = self.weights(table)
         ws = np.broadcast_to(w, (len(pods), w.shape[0]))
         if self.backend == "numpy":
-            return topsis.batched_closeness_np(mats, ws, _BENEFIT, valid)
+            return topsis.batched_closeness_np(mats, ws, self._benefit, valid)
         if self.backend == "jax":
             import jax.numpy as jnp
             # jit caches by shape: pad the pod axis to the next power of two
@@ -203,34 +248,42 @@ class BatchScheduler:
                 valid = np.concatenate(
                     [valid, np.zeros((pad, valid.shape[-1]), bool)])
             cc = topsis.batched_closeness_cc(
-                jnp.asarray(mats), jnp.asarray(ws), jnp.asarray(_BENEFIT),
-                jnp.asarray(valid))
+                jnp.asarray(mats), jnp.asarray(ws),
+                jnp.asarray(self._benefit), jnp.asarray(valid))
             return np.asarray(cc[:p])
         if self.backend == "pallas":
             from repro.kernels import ops
             return np.asarray(ops.topsis_closeness_batched(
-                mats, ws, _BENEFIT, valid=valid))
+                mats, ws, self._benefit, valid=valid))
         raise ValueError(f"unknown backend {self.backend!r}; "
                          f"choose from {BACKENDS}")
 
-    def select_many(self, pods: Sequence[Pod], nodes):
+    def select_many(self, pods: Sequence[Pod], nodes, now: float = 0.0,
+                    blocked: "Sequence[int | None] | None" = None):
         """Place a queue: returns (assignments, diagnostics) where
-        ``assignments[i]`` is the node index for ``pods[i]`` or None."""
+        ``assignments[i]`` is the node index for ``pods[i]`` or None.
+        ``blocked[i]`` optionally names one node index ``pods[i]`` must not
+        take this pass (a node it was just preempted off) — skipped inside
+        the greedy ledger walk, so a blocked top choice falls through to
+        the next-ranked node without phantom capacity charges."""
         t0 = time.perf_counter()
         table = _as_table(nodes)
         if not len(pods):
             return [], {"closeness": np.zeros((0, len(table))),
                         "scheduling_time_s": 0.0, "per_pod_time_s": 0.0}
-        cc = self.score_queue(pods, table)
+        cc = self.score_queue(pods, table, now=now)
         order = np.argsort(-cc, kind="stable", axis=-1)
         free_cpu = table.free_cpu.copy()
         free_mem = table.free_mem.copy()
         assignments: list[int | None] = []
         for i, pod in enumerate(pods):
+            forbid = blocked[i] if blocked is not None else None
             chosen = None
             for j in order[i]:
                 if np.isneginf(cc[i, j]):
                     break               # rest of the ranking is infeasible
+                if forbid is not None and int(j) == forbid:
+                    continue
                 if free_cpu[j] >= pod.cpu - 1e-9 \
                         and free_mem[j] >= pod.mem - 1e-9:
                     chosen = int(j)
@@ -263,13 +316,15 @@ class DefaultK8sScheduler:
     def __init__(self):
         self.decision_log: list[dict] = []
 
-    def select(self, pod: Pod, nodes):
+    def select(self, pod: Pod, nodes, now: float = 0.0):
         """Vectorized over ``NodeTable`` columns (``nodes`` may be a Node
         list or a prebuilt table): one broadcast pass scores the whole
         fleet, infeasible nodes score -1. Identical plugin arithmetic to
         the upstream per-node loop; ties resolve to the lowest node index
         (the loop's running-max-with-epsilon tie-break, which only diverges
-        for score gaps below 1e-12 — see tests/test_scheduler.py pinning)."""
+        for score gaps below 1e-12 — see tests/test_scheduler.py pinning).
+        ``now`` is accepted for engine-call symmetry and ignored — the
+        baseline is carbon-blind."""
         t0 = time.perf_counter()
         table = _as_table(nodes)
         fits = table.fits(pod.cpu, pod.mem)

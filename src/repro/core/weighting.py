@@ -23,17 +23,44 @@ SCHEMES: dict[str, np.ndarray] = {
 
 SCHEME_NAMES = tuple(SCHEMES)
 
+# Carbon-aware schemes (beyond-paper, repro.core.carbon): six weights, the
+# sixth on the carbon-rate criterion. Requires a carbon signal — the
+# schedulers reject these schemes without one. carbon_centric chases clean
+# regions first; carbon_energy_balanced splits sustainability weight between
+# joules and grams.
+# Order: (exec_time, energy, cores, memory, balance, carbon_rate).
+CARBON_SCHEMES: dict[str, np.ndarray] = {
+    "carbon_centric": np.array([0.15, 0.10, 0.04, 0.04, 0.07, 0.60]),
+    "carbon_energy_balanced": np.array([0.15, 0.25, 0.05, 0.05, 0.10, 0.40]),
+}
 
-def weights_for(scheme: str) -> np.ndarray:
+CARBON_SCHEME_NAMES = tuple(CARBON_SCHEMES)
+
+
+def weights_for(scheme: str, carbon: bool = False) -> np.ndarray:
+    """Normalized weight vector for a scheme.
+
+    With ``carbon=True`` (a carbon signal is attached) the paper's 5-weight
+    schemes are padded with a zero carbon weight — the 6-criteria ranking is
+    then bitwise identical to the 5-criteria one. Carbon schemes are always
+    6 weights (``carbon`` is implied).
+    """
+    if scheme in CARBON_SCHEMES:
+        w = CARBON_SCHEMES[scheme]
+        return w / w.sum()
     try:
         w = SCHEMES[scheme]
     except KeyError as e:
-        raise ValueError(f"unknown weighting scheme {scheme!r}; "
-                         f"choose from {sorted(SCHEMES)}") from e
+        raise ValueError(
+            f"unknown weighting scheme {scheme!r}; choose from "
+            f"{sorted(SCHEMES) + sorted(CARBON_SCHEMES)}") from e
+    if carbon:
+        w = np.concatenate([w, [0.0]])
     return w / w.sum()
 
 
-def adaptive_weights(scheme: str, cluster_utilization: float) -> np.ndarray:
+def adaptive_weights(scheme: str, cluster_utilization: float,
+                     carbon: bool = False) -> np.ndarray:
     """Adaptive weighting module (paper §III.A): 'dynamically adjusts criteria
     weights based on system conditions'.
 
@@ -41,9 +68,11 @@ def adaptive_weights(scheme: str, cluster_utilization: float) -> np.ndarray:
     increasingly determined by *fit* rather than *preference*: we shift weight
     from the energy criterion toward cores/memory/balance, mirroring the
     paper's observation (§V.C) that high competition 'may require hybrid
-    approaches balancing energy awareness with resource efficiency'.
+    approaches balancing energy awareness with resource efficiency'. The
+    carbon weight (6-criteria schemes) is left untouched — grid intensity
+    does not depend on cluster load.
     """
-    w = weights_for(scheme).copy()
+    w = weights_for(scheme, carbon=carbon).copy()
     u = float(np.clip(cluster_utilization, 0.0, 1.0))
     # Linear pull of up to 50% of the energy weight once utilization > 0.6.
     pull = 0.5 * max(0.0, (u - 0.6) / 0.4) * w[1]

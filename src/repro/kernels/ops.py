@@ -44,7 +44,10 @@ def topsis_closeness(matrix: jax.Array, weights: jax.Array,
                      benefit: jax.Array, *, valid: jax.Array | None = None,
                      block_n: int | None = None,
                      interpret: bool | None = None) -> jax.Array:
-    """Closeness coefficients for (N, C) decision matrix; C <= 8.
+    """Closeness coefficients for (N, C) decision matrix; C <= 8 (both the
+    paper's 5-criteria matrix and the carbon-extended 6-criteria one fit
+    the kernel's C_PAD=8 sublane padding — padded criteria rows carry zero
+    weight and contribute nothing).
 
     Global reductions (column norms, ideal points) run in XLA; the O(N*C)
     distance/closeness hot loop runs in the Pallas kernel. ``valid`` is an
@@ -88,7 +91,8 @@ def topsis_closeness_batched(mats: jax.Array, weights: jax.Array,
                              valid: jax.Array | None = None,
                              block_n: int | None = None,
                              interpret: bool | None = None) -> jax.Array:
-    """(P, N) closeness for a (P, N, C) queue tensor; C <= 8.
+    """(P, N) closeness for a (P, N, C) queue tensor; C <= 8 (5 paper
+    criteria or 6 with the carbon-rate column, both under C_PAD).
 
     The fleet-scale batch path: per-pod column norms and ideal points are
     global reductions in XLA; the Pallas kernel streams the (pods x node

@@ -216,14 +216,36 @@ def test_trace_from_file_replays(tmp_path):
 
 
 def test_trace_validates_entries():
-    with pytest.raises(ValueError):
+    for bad in (
+        [{"t": 0.0, "kind": "nope"}],                          # unknown kind
+        [{"t": 0.0}],                                          # missing kind
+        [{"t": 0.0, "kind": "light", "scheduler": "huh"}],
+        [{"kind": "light"}],                                   # missing t
+        [{"t": -1.0, "kind": "light"}],
+        [{"t": float("nan"), "kind": "light"}],
+        [{"t": float("inf"), "kind": "light"}],
+        [{"t": "soon", "kind": "light"}],                      # non-numeric t
+        [{"t": 0.0, "kind": "light", "count": 0}],             # non-positive
+        [{"t": 0.0, "kind": "light", "count": -3}],
+        [{"t": 0.0, "kind": "light", "count": 1.5}],           # non-integer
+        [{"t": 0.0, "kind": "light", "count": "two"}],
+        [{"t": 0.0, "kind": "light", "deadline_s": 0.0}],
+        [{"t": 0.0, "kind": "light", "deadline_s": float("inf")}],
+        ["not-a-dict"],
+    ):
+        with pytest.raises(ValueError):
+            TraceArrivals(bad)
+    # the error message names the offending entry and field
+    with pytest.raises(ValueError, match="count.*positive integer"):
+        TraceArrivals([{"t": 0.0, "kind": "light", "count": 0}])
+    with pytest.raises(ValueError, match="unknown workload kind"):
         TraceArrivals([{"t": 0.0, "kind": "nope"}])
-    with pytest.raises(ValueError):
-        TraceArrivals([{"t": 0.0, "kind": "light", "scheduler": "huh"}])
-    with pytest.raises(ValueError):
-        TraceArrivals([{"kind": "light"}])            # missing t
-    with pytest.raises(ValueError):
-        TraceArrivals([{"t": -1.0, "kind": "light"}])
+    # valid deferral fields round-trip into pods
+    arr = TraceArrivals([{"t": 0.0, "kind": "light", "count": 2,
+                          "deferrable": True, "deadline_s": 120.0}])
+    (_, pods), = arr.events()
+    assert len(pods) == 2
+    assert all(p.deferrable and p.deadline_s == 120.0 for p in pods)
 
 
 def test_arrival_exactly_at_completion_sees_freed_capacity():
