@@ -1,12 +1,78 @@
 """Benchmark entry point: one module per paper table/figure + the roofline
-report (assignment §Roofline, from the dry-run artifacts if present).
+report (assignment §Roofline, from the dry-run artifacts if present),
+plus an aggregation pass that folds every recorded ``BENCH_*.json``
+(scheduling / scenarios / carbon / autoscale) into one summary
+(``BENCH_summary.json``).
 
 Usage: PYTHONPATH=src python -m benchmarks.run
 """
 from __future__ import annotations
 
+import json
 import os
 import time
+
+# The recorded sweep files the aggregation pass knows how to headline.
+BENCH_FILES = ("BENCH_scheduling.json", "BENCH_scenarios.json",
+               "BENCH_carbon.json", "BENCH_autoscale.json")
+
+
+def _headline(name: str, data: dict) -> dict:
+    """Compress one recorded sweep into its headline numbers."""
+    results = data.get("results", [])
+    out: dict = {"bench": data.get("bench", name), "cells": len(results)}
+    if name == "BENCH_scheduling.json":
+        # best batched-vs-per-pod us/pod speedup at any fleet size
+        perpod = {r["n_nodes"]: r["us_per_pod"] for r in results
+                  if r.get("mode") == "per-pod" and r.get("backend") == "numpy"}
+        speedups = [perpod[r["n_nodes"]] / r["us_per_pod"] for r in results
+                    if r.get("mode") == "batched" and r.get("us_per_pod")
+                    and r["n_nodes"] in perpod]
+        if speedups:
+            out["max_batched_speedup"] = round(max(speedups), 2)
+    elif name == "BENCH_scenarios.json":
+        rates = [r["unschedulable_rate"] for r in results
+                 if "unschedulable_rate" in r]
+        if rates:
+            out["max_unschedulable_rate"] = max(rates)
+    elif name == "BENCH_carbon.json":
+        red = [s["carbon_reduction_pct"]
+               for s in data.get("carbon_reduction_summary", [])]
+        if red:
+            out["carbon_reduction_pct_range"] = [min(red), max(red)]
+    elif name == "BENCH_autoscale.json":
+        red = [s["idle_reduction_pct"]
+               for s in data.get("idle_reduction_summary", [])
+               if s["policy"] == "idle_timeout"]
+        if red:
+            out["idle_reduction_pct_range"] = [min(red), max(red)]
+    return out
+
+
+def aggregate(out: str | None = "BENCH_summary.json") -> dict:
+    """Fold every recorded BENCH_*.json into one summary dict (and file).
+    Missing sweeps are skipped — run their benchmarks to record them."""
+    summary: dict = {}
+    for name in BENCH_FILES:
+        if not os.path.exists(name):
+            continue
+        with open(name) as f:
+            data = json.load(f)
+        summary[name] = _headline(name, data)
+    if not summary:
+        print("no BENCH_*.json recorded yet; run the sweep benchmarks first")
+        return summary
+    print(f"{'sweep':28s} headline")
+    for name, head in summary.items():
+        extras = {k: v for k, v in head.items()
+                  if k not in ("bench", "cells")}
+        print(f"{head['bench']:28s} {head['cells']} cells  "
+              + "  ".join(f"{k}={v}" for k, v in extras.items()))
+    if out:
+        with open(out, "w") as f:
+            json.dump(summary, f, indent=1)
+        print(f"wrote {out}")
+    return summary
 
 
 def main() -> None:
@@ -47,6 +113,12 @@ def main() -> None:
         recs = roofline_report.load("experiments/dryrun", "single")
         if recs:
             print(roofline_report.fmt(recs))
+
+    print()
+    print("=" * 72)
+    print("Recorded sweep summary — BENCH_*.json aggregation")
+    print("=" * 72)
+    aggregate()
 
     print(f"\n# benchmarks completed in {time.time() - t0:.1f}s")
 

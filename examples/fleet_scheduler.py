@@ -134,3 +134,43 @@ edges, grams = res.carbon_series("topsis")
 for k in range(0, len(edges), max(1, len(edges) // 4)):
     print(f"  t={edges[k]:8.1f}s  cumulative TOPSIS carbon "
           f"{grams[k]:7.4f} g")
+
+# --- elastic fleet: idle-timeout sleep + TOPSIS-driven consolidation ------------
+# Without a node lifecycle the fleet pays every node's idle power for the
+# whole run. AutoscalePolicy sleeps nodes empty past the idle timeout
+# (queue pressure wakes the TOPSIS-best sleeping node back up; pods landing
+# on a WAKING node start after its wake latency), and the consolidation
+# pass drains low-utilization nodes through the preemption machinery, then
+# puts them straight to sleep. Fleet idle energy — busy-union idle + the
+# IDLE/ASLEEP/WAKING state ledger + wake surges — drops accordingly.
+from repro.core.elastic import AutoscalePolicy, always_on_fleet_idle_kj
+
+elastic_arrivals = lambda: PoissonArrivals(rate_per_s=0.2, n_bursts=6,
+                                           burst_size=12, seed=0)
+mixed_fleet = lambda: make_scenario_cluster("mixed", 64, seed=0)
+print(f"\n--- elastic fleet: idle-timeout + consolidation on 64 mixed nodes")
+runs = {}
+for name, pol in (
+        ("no policy (always-on)", None),
+        ("idle-timeout 60s", AutoscalePolicy(idle_timeout_s=60.0)),
+        ("+ consolidation", AutoscalePolicy(idle_timeout_s=60.0,
+                                            consolidate_interval_s=30.0,
+                                            consolidate_util_below=0.3))):
+    res = run_scenario(elastic_arrivals(), "energy_centric",
+                       cluster_factory=mixed_fleet, batch=True,
+                       batch_backend="jax", autoscale=pol)
+    horizon = max(r.start_s + r.runtime_s for r in res.records)
+    if pol is None:
+        # lifecycle-free engine: every node draws idle power all run long
+        idle_kj = always_on_fleet_idle_kj(mixed_fleet(), horizon)
+    else:
+        idle_kj = res.fleet_idle_energy_kj()
+    runs[name] = idle_kj
+    print(f"  {name:22s}: fleet idle {idle_kj:7.2f} kJ  "
+          f"wakes {res.wakes:2d}  sleeps {res.sleeps:2d}  "
+          f"migrations {res.migrations:2d}")
+base = runs["no policy (always-on)"]
+for name, kj in runs.items():
+    if name != "no policy (always-on)":
+        print(f"  {name:22s}: {100.0 * (1.0 - kj / base):.1f}% less fleet "
+              f"idle energy than the always-on baseline")

@@ -10,6 +10,7 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.carbon import DEFAULT_REGIONS
+from repro.core.elastic import ASLEEP
 from repro.core.energy import NODE_ENERGY_PROFILES
 
 
@@ -27,6 +28,12 @@ class Node:
     # grid region the node draws power from (carbon-aware stack,
     # repro.core.carbon); the paper's cluster keeps the single "default"
     region: str = "default"
+    # power-state lifecycle (elastic fleet subsystem, repro.core.elastic):
+    # "active" | "idle" | "asleep" | "waking", maintained by ElasticFleet
+    # when an AutoscalePolicy drives the run. None (the default) means "no
+    # lifecycle" — the awake criterion falls back to the static used_cpu
+    # derivation and everything reproduces the policy-free engine bitwise.
+    power_state: str | None = None
 
     @property
     def speed(self) -> float:
@@ -89,10 +96,25 @@ class NodeTable:
     # grid region per node (carbon column lookups); defaults to "default"
     # everywhere for tables built before the carbon stack existed
     region: list[str] = dataclasses.field(default_factory=list)
+    # power-state column (elastic fleet subsystem): None entries mean "no
+    # lifecycle" and keep the legacy awake derivation for that node
+    power_state: "list[str | None]" = dataclasses.field(default_factory=list)
 
     def __post_init__(self):
         if not self.region:
             self.region = ["default"] * len(self.names)
+        if not self.power_state:
+            self.power_state = [None] * len(self.names)
+        # precompute the lifecycle masks once per snapshot so the hot
+        # `awake` property stays a vectorized select (None = no lifecycle)
+        if any(s is not None for s in self.power_state):
+            self._state_known = np.asarray(
+                [s is not None for s in self.power_state])
+            self._state_awake = np.asarray(
+                [s is not None and s != ASLEEP for s in self.power_state])
+        else:
+            self._state_known = None
+            self._state_awake = None
 
     @classmethod
     def from_nodes(cls, nodes: Sequence[Node]) -> "NodeTable":
@@ -111,6 +133,7 @@ class NodeTable:
             dyn_power_per_vcpu=f64([p["dyn_power_per_vcpu"] for p in prof]),
             idle_power=f64([p["idle_power"] for p in prof]),
             region=[n.region for n in nodes],
+            power_state=[n.power_state for n in nodes],
         )
 
     def __len__(self) -> int:
@@ -130,7 +153,18 @@ class NodeTable:
 
     @property
     def awake(self) -> np.ndarray:
-        return self.used_cpu > 1e-9
+        """Awake mask feeding the marginal-idle rule of the energy and
+        carbon-rate criteria: an awake node's idle power is already paid,
+        so a placement there costs only dynamic power. With a real
+        power-state column (elastic fleet subsystem) a node is awake in
+        every state but ASLEEP — in particular an empty-but-IDLE node is
+        awake, unlike the static derivation that treats every empty node as
+        a wake-up cost. Nodes without a lifecycle keep the legacy
+        ``used_cpu > 0`` derivation, bitwise."""
+        derived = self.used_cpu > 1e-9
+        if self._state_known is None:
+            return derived
+        return np.where(self._state_known, self._state_awake, derived)
 
     def fits(self, cpu, mem) -> np.ndarray:
         """Bool feasibility mask (PodFitsResources filter): (N,) for scalar

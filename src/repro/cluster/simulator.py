@@ -28,6 +28,22 @@ deadline) when its node's regional intensity spikes above the preemption
 threshold; its power-timeline segment is truncated at the eviction instant
 so the energy/carbon interval splits between the partial and requeued runs.
 Without a policy the loop is byte-for-byte the legacy one.
+
+Elastic fleet events (``autoscale=AutoscalePolicy(...)``,
+``repro.core.elastic``) give nodes a power-state lifecycle on top: *sleep*
+— a node empty past the idle timeout falls ASLEEP lazily (no event needed;
+rounds simply see it excluded and the state ledger records the transition
+exactly); *wake* — pods that end a round unplaced wake the TOPSIS-best
+sleeping node (a real event: the round re-runs when the wake completes,
+and pods committed to a still-WAKING node start exactly at its ready
+instant, never past a deferrable pod's deadline); *drain* — the periodic
+consolidation pass evicts and requeues every task of a low-utilization
+node through the same truncate-and-requeue machinery preemption uses, then
+puts the node straight to sleep. State-dependent idle power, sleep
+residuals, and wake surges land on the run's ``PowerTimeline`` state
+ledger (``fleet_idle_energy_kj`` / ``fleet_carbon_g``). With
+``autoscale=None`` none of this machinery runs and the engine reproduces
+the policy-free output bitwise.
 """
 from __future__ import annotations
 
@@ -39,6 +55,7 @@ from typing import Callable
 import numpy as np
 
 from repro.core.carbon import CarbonPolicy
+from repro.core.elastic import AutoscalePolicy, ElasticFleet
 from repro.core.energy import (NODE_ENERGY_PROFILES, PowerTimeline,
                                task_energy_joules)
 from repro.core.scheduler import (BatchScheduler, DefaultK8sScheduler,
@@ -65,6 +82,10 @@ class SimResult:
     unschedulable: int
     timeline: PowerTimeline | None = None
     preemptions: int = 0
+    # elastic fleet counters (autoscale runs; zero otherwise)
+    migrations: int = 0        # tasks drained off consolidated nodes
+    wakes: int = 0             # ASLEEP -> WAKING transitions
+    sleeps: int = 0            # falls asleep (idle timeout or drain)
 
     def _timeline(self) -> PowerTimeline:
         """The run's power timeline (rebuilt from records for results
@@ -103,6 +124,31 @@ class SimResult:
     def carbon_series(self, scheduler: str | None = None):
         """Time-resolved cumulative carbon ``(edges_s, grams)``."""
         return self._timeline().carbon_series(scheduler)
+
+    def fleet_idle_energy_kj(self) -> float:
+        """Every joule the fleet drew that is not task dynamic power:
+        busy-union idle + power-state ledger (IDLE/ASLEEP/WAKING draw) +
+        wake surges. On a run without an AutoscalePolicy the state ledger
+        is empty and this reduces to the busy-union idle total — which
+        *excludes* empty nodes' draw; when comparing a policy run against
+        a no-policy baseline, use
+        ``repro.core.elastic.always_on_fleet_idle_kj`` for the baseline
+        side."""
+        return self._timeline().fleet_idle_energy_kj()
+
+    def fleet_energy_kj(self) -> float:
+        """Whole-fleet energy: dynamic + :meth:`fleet_idle_energy_kj`."""
+        return self._timeline().fleet_energy_kj()
+
+    def state_energy_kj(self, state: str | None = None) -> float:
+        """Energy drawn in one power state (or all, state=None) off the
+        elastic state ledger, in kJ."""
+        return self._timeline().state_energy_j(state) / 1000.0
+
+    def fleet_carbon_g(self) -> float:
+        """Whole-fleet carbon including the state ledger (needs a carbon
+        signal on the run, like :meth:`total_carbon_g`)."""
+        return self._timeline().fleet_carbon_g()
 
     def mean_deferral_latency_s(self, scheduler: str | None = None) -> float:
         """Mean wait between arrival and *first* start over deferrable pods
@@ -161,37 +207,69 @@ class SimResult:
 def _commit(pod: Pod, idx: int, nodes: list[Node], t: float,
             sched_time_s: float, records: list[PodRecord],
             running: list, timeline: PowerTimeline,
-            arrival_s: float = 0.0) -> None:
+            arrival_s: float = 0.0, efleet: ElasticFleet | None = None) -> None:
     """Bind pod to nodes[idx], append its record + completion event, and
     post the task segment to the power timeline. The running-heap entry
     carries the record and segment indices so a preemption can truncate
-    both at the eviction instant."""
+    both at the eviction instant. With an elastic fleet the task's start is
+    its *effective* start — delayed to the wake-completion instant when the
+    chosen node is still WAKING."""
     node = nodes[idx]
     node.bind(pod.cpu, pod.mem)
+    start = efleet.on_commit(idx, t) if efleet is not None else t
     rt = predict_exec_time(pod, node)
     ej = task_energy_joules(node.node_class, rt, pod.cpu)
-    records.append(PodRecord(pod, node.name, node.node_class, t, rt,
+    records.append(PodRecord(pod, node.name, node.node_class, start, rt,
                              ej, sched_time_s, arrival_s))
-    timeline.add(node.name, node.node_class, pod.scheduler, t, rt,
+    timeline.add(node.name, node.node_class, pod.scheduler, start, rt,
                  NODE_ENERGY_PROFILES[node.node_class]["dyn_power_per_vcpu"]
                  * pod.cpu)
-    heapq.heappush(running, (t + rt, pod.uid, pod, idx,
+    heapq.heappush(running, (start + rt, pod.uid, pod, idx,
                              len(records) - 1, len(timeline.segments) - 1))
 
 
-def _pop_release(running: list, nodes: list[Node]) -> float:
+def _pop_release(running: list, nodes: list[Node],
+                 efleet: ElasticFleet | None = None) -> float:
     """Pop the earliest completion, release its resources, return its end
     time (the backoff/retry step)."""
     end_t, _, done, idx, _, _ = heapq.heappop(running)
     nodes[idx].release(done.cpu, done.mem)
+    if efleet is not None:
+        efleet.on_complete(idx, end_t)
     return end_t
+
+
+def _evict(victims: list[tuple], t: float, running: list, nodes: list[Node],
+           records: list[PodRecord], timeline: PowerTimeline,
+           efleet: ElasticFleet | None = None) -> list[Pod]:
+    """Evict running-heap entries at instant ``t`` (carbon preemption or a
+    consolidation drain): release resources, truncate each victim's record
+    and power segment at ``t``, and return the pods to requeue. A victim
+    committed to a still-WAKING node has ``start_s > t`` — it never ran, so
+    its partial attempt clamps to zero runtime/energy."""
+    gone = {e[1] for e in victims}
+    running[:] = [e for e in running if e[1] not in gone]
+    heapq.heapify(running)
+    pods: list[Pod] = []
+    for _, uid, pod, idx, rec_i, seg_i in victims:
+        nodes[idx].release(pod.cpu, pod.mem)
+        if efleet is not None:
+            efleet.on_evict(idx, t)
+        rec = records[rec_i]
+        elapsed = max(t - rec.start_s, 0.0)
+        rec.runtime_s = elapsed
+        rec.energy_j = timeline.segments[seg_i].dyn_power_w * elapsed
+        timeline.truncate(seg_i, t)
+        pods.append(pod)
+    return pods
 
 
 def run_burst(pods: list[Pod], nodes: list[Node], sched: BatchScheduler,
               t: float, records: list[PodRecord], running: list,
               timeline: PowerTimeline,
               arrive: dict[int, float] | None = None,
-              block: dict[int, int] | None = None) -> list[Pod]:
+              block: dict[int, int] | None = None,
+              exclude=None, efleet: ElasticFleet | None = None) -> list[Pod]:
     """Schedule an arrival burst through one batched scoring pass
     (``BatchScheduler.select_many``) and commit the assignments. Returns
     the pods that did not fit. ``block`` maps pod uid -> a node index the
@@ -199,17 +277,20 @@ def run_burst(pods: list[Pod], nodes: list[Node], sched: BatchScheduler,
     preempted off — an instant same-node restart would discard the partial
     run for nothing); the exclusion happens inside ``select_many``'s
     greedy ledger, so a blocked top choice falls through to the pod's
-    next-ranked node without charging phantom capacity."""
+    next-ranked node without charging phantom capacity. ``exclude`` ((N,)
+    or (P, N) bool) hard-masks engine-forbidden nodes (ASLEEP capacity;
+    per-pod deadline-late WAKING nodes) out of the scoring validity."""
     blocked = [block.get(p.uid) for p in pods] if block else None
     assignments, diag = sched.select_many(pods, nodes, now=t,
-                                          blocked=blocked)
+                                          blocked=blocked, exclude=exclude)
     still: list[Pod] = []
     for pod, idx in zip(pods, assignments):
         if idx is None:
             still.append(pod)
             continue
         _commit(pod, idx, nodes, t, diag["per_pod_time_s"], records, running,
-                timeline, arrival_s=(arrive or {}).get(pod.uid, 0.0))
+                timeline, arrival_s=(arrive or {}).get(pod.uid, 0.0),
+                efleet=efleet)
     return still
 
 
@@ -217,7 +298,8 @@ def run_scenario(arrivals: ArrivalProcess, scheme: str,
                  cluster_factory: Callable[[], list[Node]] = make_paper_cluster,
                  adaptive: bool = False, batch: bool = False,
                  batch_backend: str = "jax",
-                 carbon: CarbonPolicy | None = None) -> SimResult:
+                 carbon: CarbonPolicy | None = None,
+                 autoscale: AutoscalePolicy | None = None) -> SimResult:
     """Drive one scenario through the event-driven engine.
 
     Events are pod-arrival bursts (from ``arrivals``) and task completions
@@ -243,6 +325,23 @@ def run_scenario(arrivals: ArrivalProcess, scheme: str,
     ``carbon.preempt_threshold``, truncating its timeline segment and
     requeueing it as pending. Deferred pods are never counted
     unschedulable while a wake event is still due.
+
+    With an ``autoscale`` policy (``repro.core.elastic``) nodes get a
+    power-state lifecycle: (1) every round excludes ASLEEP nodes and feeds
+    real power states into the awake/marginal-idle criterion (an IDLE node
+    is awake — zero marginal idle cost); (2) pods still pending after a
+    round wake the TOPSIS-best sleeping nodes (a pod committed to a node
+    that is still WAKING starts exactly at the wake-completion instant,
+    and a deferrable pod is never committed to a WAKING node whose ready
+    time lies past its deadline); (3) at ``consolidate_interval_s``
+    cadence, low-utilization nodes are drained — every running task
+    evicted, truncated, and requeued through the preemption machinery,
+    only when it provably fits on the remaining awake fleet and never when
+    a deferrable victim is at/past its deadline — and put straight to
+    sleep. The fleet's IDLE/ASLEEP/WAKING draw and wake surges land on the
+    timeline's state ledger (``SimResult.fleet_idle_energy_kj`` /
+    ``fleet_carbon_g``). ``autoscale=None`` reproduces the policy-free
+    engine bitwise.
     """
     nodes = cluster_factory()
     csig = carbon.signal if carbon is not None else None
@@ -266,6 +365,13 @@ def run_scenario(arrivals: ArrivalProcess, scheme: str,
     preempted: set[int] = set()        # uids evicted once already
     evict_block: dict[int, tuple[int, float]] = {}   # uid -> (node_i, t_evict)
     n_preempt = 0
+    n_migrations = 0
+    efleet = (ElasticFleet(nodes, autoscale, timeline)
+              if autoscale is not None else None)
+    next_consolidate = (autoscale.consolidate_interval_s
+                        if autoscale is not None
+                        and autoscale.consolidate_interval_s is not None
+                        else None)
     t = 0.0
     unschedulable = 0
 
@@ -289,9 +395,14 @@ def run_scenario(arrivals: ArrivalProcess, scheme: str,
         # safety net: release anything that finished before now (the advance
         # step below never moves the clock past an unreleased completion)
         while running and running[0][0] < t:
-            _pop_release(running, nodes)
+            _pop_release(running, nodes, efleet)
         if not pending and not running and ei >= len(events):
             break
+        # elastic bookkeeping: finalize wake transitions completed by now
+        # (their WAKING intervals land in the state ledger; the nodes turn
+        # ACTIVE or IDLE before this round queries states)
+        if efleet is not None:
+            efleet.advance_to(t)
         # preemption event: evict running deferrable tasks whose node's
         # regional intensity spiked above the threshold (once per pod,
         # never past its deadline); truncate their ledger entries at t and
@@ -309,23 +420,55 @@ def run_scenario(arrivals: ArrivalProcess, scheme: str,
                        and carbon.signal.intensity(nodes[e[3]].region, t)
                        > carbon.preempt_threshold]
             if victims:
-                gone = {e[1] for e in victims}
-                running = [e for e in running if e[1] not in gone]
-                heapq.heapify(running)
-                for _, uid, pod, idx, rec_i, seg_i in victims:
-                    nodes[idx].release(pod.cpu, pod.mem)
-                    rec = records[rec_i]
-                    elapsed = t - rec.start_s
-                    rec.runtime_s = elapsed
-                    rec.energy_j = (timeline.segments[seg_i].dyn_power_w
-                                    * elapsed)
-                    timeline.truncate(seg_i, t)
+                pending.extend(_evict(victims, t, running, nodes, records,
+                                      timeline, efleet))
+                for _, uid, _, idx, _, _ in victims:
                     preempted.add(uid)
                     evict_block[uid] = (idx, t)
-                    pending.append(pod)
-                    n_preempt += 1
+                n_preempt += len(victims)
+        # consolidation drain event (elastic fleet): at the policy cadence,
+        # evict + requeue every task of the low-utilization nodes the
+        # policy picked (each provably fits on the remaining awake fleet;
+        # deferrable victims are never drained at/past their deadline) and
+        # put the emptied nodes straight to sleep. Requeued pods re-enter
+        # this round's pending queue and re-place through the normal TOPSIS
+        # round; the drained node is ASLEEP, so the exclusion mask keeps
+        # them from bouncing straight back.
+        if (efleet is not None and next_consolidate is not None
+                and t >= next_consolidate):
+            if running:
+                drain_idxs, victims = efleet.consolidation_victims(
+                    t, running, _deadline)
+                if victims:
+                    # drained pods go to the FRONT of the queue: they are
+                    # older than any pod arriving this round, and restart
+                    # priority is what keeps the drain-time fit guarantee
+                    # (and deferrable victims' deadlines) honest against
+                    # same-round arrival contention
+                    pending[:0] = _evict(victims, t, running, nodes,
+                                         records, timeline, efleet)
+                    n_migrations += len(victims)
+                    for i in drain_idxs:
+                        efleet.force_sleep(i, t)
+            next_consolidate = t + autoscale.consolidate_interval_s
         blocked_now = {uid: idx for uid, (idx, tt) in evict_block.items()
                        if tt == t}
+        # exclusion masks for this round: ASLEEP nodes for everyone, plus —
+        # per deferrable pod — WAKING nodes whose ready time lies past the
+        # pod's deadline (it would start there, violating the deferral
+        # contract). Also refresh the power-state column the awake
+        # criterion reads.
+        base_ex = None
+        if efleet is not None:
+            efleet.write_states(t)
+            base_ex = efleet.exclude_mask(t)
+
+        def _exclude_for(pod: Pod):
+            if base_ex is None:
+                return None
+            if pod.deferrable and math.isfinite(pod.deadline_s):
+                return efleet.exclude_for_deadline(base_ex, _deadline(pod))
+            return base_ex
         # scheduling round: place what fits, FIFO retry for the rest;
         # deferrable pods sit out while the fleet-wide carbon dip test
         # fails and their deadline is still ahead
@@ -343,19 +486,28 @@ def run_scenario(arrivals: ArrivalProcess, scheme: str,
             if batch and pod.scheduler == "topsis":
                 burst.append(pod)
                 continue
-            idx, diag = sched[pod.scheduler].select(pod, nodes, now=t)
+            idx, diag = sched[pod.scheduler].select(pod, nodes, now=t,
+                                                    exclude=_exclude_for(pod))
             if idx is None:
                 continue
             if blocked_now.get(pod.uid) == idx:
                 deferred.append(pod)      # blocked instant same-node restart
                 continue
             _commit(pod, idx, nodes, t, diag["scheduling_time_s"], records,
-                    running, timeline, arrival_s=arrive.get(pod.uid, 0.0))
+                    running, timeline, arrival_s=arrive.get(pod.uid, 0.0),
+                    efleet=efleet)
             placed.add(pod.uid)
         if burst:
+            ex_b = None
+            if base_ex is not None:
+                per_pod = [_exclude_for(p) for p in burst]
+                ex_b = (np.stack(per_pod)
+                        if any(pp is not base_ex for pp in per_pod)
+                        else base_ex)
             b_still = run_burst(burst, nodes, sched["topsis"], t,
                                 records, running, timeline, arrive,
-                                block=blocked_now)
+                                block=blocked_now, exclude=ex_b,
+                                efleet=efleet)
             placed.update({p.uid for p in burst} - {p.uid for p in b_still})
         pending = [p for p in pending if p.uid not in placed]
         # evicted-but-unplaced victims wait like deferred pods (guarantees
@@ -363,6 +515,15 @@ def run_scenario(arrivals: ArrivalProcess, scheme: str,
         in_deferred = {p.uid for p in deferred}
         deferred.extend(p for p in pending
                         if p.uid in blocked_now and p.uid not in in_deferred)
+        # queue-pressure wake (elastic fleet): pods that ended this round
+        # unplaced — and are not voluntarily deferring — wake the
+        # TOPSIS-best sleeping nodes; the wake-completion event re-runs the
+        # round, where the pods can commit onto the WAKING capacity
+        if efleet is not None and pending:
+            in_deferred_now = {p.uid for p in deferred}
+            pressure = [p for p in pending if p.uid not in in_deferred_now]
+            if pressure:
+                efleet.wake_for_pressure(sched["topsis"], pressure, t)
         # advance the clock to the next event: completion, arrival burst,
         # or carbon-check wake (while pods defer or preemptable tasks run)
         next_arrival = events[ei][0] if ei < len(events) else None
@@ -379,11 +540,27 @@ def run_scenario(arrivals: ArrivalProcess, scheme: str,
             cands = [c for c in cands if c > t]
             if cands:
                 next_wake = min(cands)
+        # elastic wake-like events: in-flight node wake completions (the
+        # pending pods retry onto the now-awake capacity) and the next
+        # consolidation tick (only while tasks run — a drained fleet has
+        # nothing to consolidate, and an unconditional tick would keep the
+        # loop alive forever)
+        if efleet is not None:
+            ecands = []
+            nt = efleet.next_transition(t)
+            if nt is not None:
+                ecands.append(nt)
+            if next_consolidate is not None and running \
+                    and next_consolidate > t:
+                ecands.append(next_consolidate)
+            if ecands:
+                ne = min(ecands)
+                next_wake = ne if next_wake is None else min(next_wake, ne)
         if pending and next_completion is not None \
                 and (next_arrival is None or next_completion <= next_arrival) \
                 and (next_wake is None or next_completion <= next_wake):
             # backoff step: free exactly one completed pod, then retry
-            t = _pop_release(running, nodes)
+            t = _pop_release(running, nodes, efleet)
             continue
         if next_arrival is not None and (next_wake is None
                                          or next_arrival <= next_wake):
@@ -391,13 +568,13 @@ def run_scenario(arrivals: ArrivalProcess, scheme: str,
                 # release completions due at-or-before the arrival (one per
                 # iteration) so the burst schedules against freed capacity —
                 # including the exact completion==arrival tie
-                t = _pop_release(running, nodes)
+                t = _pop_release(running, nodes, efleet)
                 continue
             t = next_arrival
             continue
         if next_wake is not None:
             if next_completion is not None and next_completion <= next_wake:
-                t = _pop_release(running, nodes)
+                t = _pop_release(running, nodes, efleet)
                 continue
             t = next_wake
             continue
@@ -406,7 +583,23 @@ def run_scenario(arrivals: ArrivalProcess, scheme: str,
             unschedulable += len(pending)
             break
         break   # only running tasks remain; their records are complete
-    return SimResult(records, unschedulable, timeline, preemptions=n_preempt)
+    if efleet is not None:
+        # close the power-state ledger at the run horizon (latest task end
+        # or the final clock, whichever is later): drain the still-running
+        # completions through the elastic hooks so every node's
+        # post-last-task idle tail (and the ASLEEP stretch it lazily decays
+        # into) lands in the timeline, then flush the open intervals —
+        # state energy/carbon totals are exact
+        horizon = t
+        for r in records:
+            horizon = max(horizon, r.start_s + r.runtime_s)
+        while running:
+            _pop_release(running, nodes, efleet)
+        efleet.close(horizon)
+    return SimResult(records, unschedulable, timeline, preemptions=n_preempt,
+                     migrations=n_migrations,
+                     wakes=efleet.wakes if efleet is not None else 0,
+                     sleeps=efleet.sleeps if efleet is not None else 0)
 
 
 def run_experiment(level: str, scheme: str,

@@ -7,6 +7,7 @@ import dataclasses
 import itertools
 import json
 import math
+import os
 
 
 @dataclasses.dataclass(frozen=True)
@@ -187,14 +188,16 @@ class TraceArrivals(ArrivalProcess):
     a trace replays to the identical pod stream every run.
 
     Every entry is validated up front with a message naming the offending
-    entry — a malformed trace fails at construction, not deep inside the
-    event engine.
+    entry (and, when loaded via :meth:`from_file`, the source file) — a
+    malformed trace fails at construction, not deep inside the event
+    engine.
     """
 
-    def __init__(self, entries: "list[dict]"):
+    def __init__(self, entries: "list[dict]", source: str | None = None):
         self.entries = list(entries)
+        prefix = f"{source}: " if source else ""
         for i, e in enumerate(self.entries):
-            where = f"trace entry {i} ({e!r})"
+            where = f"{prefix}trace entry {i} ({e!r})"
             if not isinstance(e, dict):
                 raise ValueError(f"{where}: expected an object with at "
                                  f"least 't' and 'kind' fields")
@@ -231,9 +234,12 @@ class TraceArrivals(ArrivalProcess):
                                  f"and positive, got {ddl!r}")
 
     @classmethod
-    def from_file(cls, path: str) -> "TraceArrivals":
+    def from_file(cls, path) -> "TraceArrivals":
+        """Load a JSON trace; ``path`` may be a ``str`` or any
+        ``os.PathLike`` (``pathlib.Path``). Validation errors are prefixed
+        with the file path and the offending entry's index."""
         with open(path) as f:
-            return cls(json.load(f))
+            return cls(json.load(f), source=os.fspath(path))
 
     def events(self):
         uid = itertools.count()

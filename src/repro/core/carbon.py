@@ -33,6 +33,7 @@ import bisect
 import dataclasses
 import json
 import math
+import os
 from typing import Sequence
 
 import numpy as np
@@ -164,37 +165,53 @@ class TraceCarbon(CarbonSignal):
     before a region's first reading the first value applies. Regions absent
     from the trace fall back to the ``"default"`` region's series.
 
-    Mirrors ``TraceArrivals``: :meth:`from_file` loads a JSON list, entries
-    are validated up front with clear messages, and a fixed trace replays to
-    the identical signal every run.
+    Mirrors ``TraceArrivals``: :meth:`from_file` loads a JSON list (``str``
+    or ``pathlib.Path``), entries are validated up front with messages
+    naming the offending entry's index (and the source file when loaded
+    from one), and a fixed trace replays to the identical signal every run.
     """
 
-    def __init__(self, entries: "list[dict]"):
+    def __init__(self, entries: "list[dict]", source: str | None = None):
+        prefix = f"{source}: " if source else ""
         series: dict[str, list[tuple[float, float]]] = {}
-        for e in entries:
-            if "t" not in e or not math.isfinite(float(e["t"])) \
-                    or float(e["t"]) < 0.0:
+        for i, e in enumerate(entries):
+            where = f"{prefix}carbon trace entry {i} ({e!r})"
+            if not isinstance(e, dict):
+                raise ValueError(f"{where}: expected an object with 't' "
+                                 f"and 'intensity' fields")
+            try:
+                t_ok = math.isfinite(float(e["t"])) and float(e["t"]) >= 0.0
+            except (KeyError, TypeError, ValueError):
+                t_ok = False
+            if not t_ok:
                 raise ValueError(
-                    f"carbon trace entry needs a finite non-negative 't': {e}")
-            if "intensity" not in e or not math.isfinite(float(e["intensity"])) \
-                    or float(e["intensity"]) < 0.0:
-                raise ValueError("carbon trace entry needs a finite "
-                                 f"non-negative 'intensity' (gCO2/kWh): {e}")
+                    f"{where}: needs a finite non-negative 't'")
+            try:
+                i_ok = (math.isfinite(float(e["intensity"]))
+                        and float(e["intensity"]) >= 0.0)
+            except (KeyError, TypeError, ValueError):
+                i_ok = False
+            if not i_ok:
+                raise ValueError(f"{where}: needs a finite non-negative "
+                                 f"'intensity' (gCO2/kWh)")
             region = e.get("region", "default")
             if not isinstance(region, str) or not region:
-                raise ValueError(f"carbon trace 'region' must be a non-empty "
-                                 f"string: {e}")
+                raise ValueError(f"{where}: 'region' must be a non-empty "
+                                 f"string")
             series.setdefault(region, []).append(
                 (float(e["t"]), float(e["intensity"])))
         if not series:
-            raise ValueError("carbon trace has no entries")
+            raise ValueError(f"{prefix}carbon trace has no entries")
         self.series = {r: sorted(pts) for r, pts in series.items()}
         self._times = {r: [t for t, _ in pts] for r, pts in self.series.items()}
 
     @classmethod
-    def from_file(cls, path: str) -> "TraceCarbon":
+    def from_file(cls, path) -> "TraceCarbon":
+        """Load a JSON trace; ``path`` may be a ``str`` or any
+        ``os.PathLike`` (``pathlib.Path``). Validation errors are prefixed
+        with the file path and the offending entry's index."""
         with open(path) as f:
-            return cls(json.load(f))
+            return cls(json.load(f), source=os.fspath(path))
 
     def _pts(self, region: str) -> list[tuple[float, float]]:
         pts = self.series.get(region)

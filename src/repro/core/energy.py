@@ -142,6 +142,39 @@ def union_length(intervals: list[tuple[float, float]]) -> float:
 
 
 @dataclasses.dataclass(frozen=True)
+class StateInterval:
+    """One node's stay in a non-task power state (elastic fleet subsystem,
+    ``repro.core.elastic``): the node draws ``power_w`` on
+    ``[start_s, end_s)`` while IDLE (awake, empty), ASLEEP (suspended
+    residual), or WAKING (booting back up). Task-occupancy (ACTIVE) power is
+    not recorded here — it stays attributed to schedulers via the busy-union
+    idle accounting, so the two ledgers never double count."""
+
+    node: str
+    node_class: str
+    state: str             # "idle" | "asleep" | "waking"
+    start_s: float
+    end_s: float
+    power_w: float
+
+    @property
+    def energy_j(self) -> float:
+        return self.power_w * (self.end_s - self.start_s)
+
+
+@dataclasses.dataclass(frozen=True)
+class WakeTransition:
+    """One ASLEEP→awake transition's surge energy, posted as a lump at the
+    wake-request instant ``t_s`` (the latency's baseline draw is a WAKING
+    ``StateInterval``; this is the extra spin-up cost on top)."""
+
+    node: str
+    node_class: str
+    t_s: float
+    energy_j: float
+
+
+@dataclasses.dataclass(frozen=True)
 class PowerSegment:
     """One task's occupancy of one node: draws ``dyn_power_w`` on
     ``[start_s, start_s + runtime_s)`` and keeps the node awake (idle power
@@ -181,12 +214,22 @@ class PowerTimeline:
     task's segment is cut at the eviction instant via :meth:`truncate`, so
     its energy/carbon interval splits between the partial run and the
     requeued one.
+
+    State ledger (elastic fleet subsystem, ``repro.core.elastic``): with an
+    ``AutoscalePolicy`` on the run, the fleet's non-task power draw lands
+    here as :class:`StateInterval` entries (IDLE / ASLEEP / WAKING) plus
+    :class:`WakeTransition` surge lumps. ``fleet_idle_energy_kj`` /
+    ``fleet_energy_kj`` / ``fleet_carbon_g`` combine both ledgers; the
+    per-scheduler views above are untouched (a run without a policy records
+    no state intervals and reproduces the legacy accounting bitwise).
     """
 
     def __init__(self, segments: list[PowerSegment] | None = None,
                  carbon_signal=None,
                  node_region: "dict[str, str] | None" = None):
         self.segments: list[PowerSegment] = list(segments or [])
+        self.state_intervals: list[StateInterval] = []
+        self.wake_transitions: list[WakeTransition] = []
         self.carbon_signal = carbon_signal
         self.node_region: dict[str, str] = dict(node_region or {})
 
@@ -194,6 +237,20 @@ class PowerTimeline:
             runtime_s: float, dyn_power_w: float) -> None:
         self.segments.append(PowerSegment(node, node_class, scheduler,
                                           start_s, runtime_s, dyn_power_w))
+
+    def add_state(self, node: str, node_class: str, state: str,
+                  start_s: float, end_s: float, power_w: float) -> None:
+        """Post one node-state stay to the state ledger (empty intervals are
+        dropped, so lazy materialization can emit degenerate bounds)."""
+        if end_s > start_s:
+            self.state_intervals.append(
+                StateInterval(node, node_class, state, start_s, end_s,
+                              power_w))
+
+    def add_wake(self, node: str, node_class: str, t_s: float,
+                 energy_j: float) -> None:
+        self.wake_transitions.append(
+            WakeTransition(node, node_class, t_s, energy_j))
 
     def truncate(self, index: int, end_s: float) -> None:
         """Cut segment ``index`` short at ``end_s`` (task preempted): its
@@ -333,6 +390,49 @@ class PowerTimeline:
             for k in range(i0, i1):
                 delta[k] += p * sig.integral(region, edges[k], edges[k + 1])
         return edges, np.concatenate([[0.0], np.cumsum(delta / J_PER_KWH)])
+
+    # --- state ledger (elastic fleet subsystem) ------------------------------
+    def state_energy_j(self, state: str | None = None) -> float:
+        """Non-task baseline energy from the state ledger: idle power while
+        IDLE or WAKING, residual draw while ASLEEP (``state`` filters to one
+        state; None sums all). Zero on runs without an AutoscalePolicy."""
+        return sum(iv.energy_j for iv in self.state_intervals
+                   if state is None or iv.state == state)
+
+    def wake_transition_energy_j(self) -> float:
+        """Total wake-surge energy (one lump per ASLEEP→awake transition)."""
+        return sum(w.energy_j for w in self.wake_transitions)
+
+    def fleet_idle_energy_kj(self) -> float:
+        """Every joule the fleet drew that is not task dynamic power:
+        busy-union idle (attributed to schedulers) + state-ledger draw +
+        wake surges — the quantity an idle-timeout policy exists to cut."""
+        return (self.idle_energy_j(None) + self.state_energy_j()
+                + self.wake_transition_energy_j()) / 1000.0
+
+    def fleet_energy_kj(self) -> float:
+        """Whole-fleet energy over the run: task dynamic energy plus
+        :meth:`fleet_idle_energy_kj`."""
+        return self.dynamic_energy_j(None) / 1000.0 + self.fleet_idle_energy_kj()
+
+    def state_carbon_g(self) -> float:
+        """Operational carbon of the state ledger: each interval's constant
+        power integrated against its region's intensity (exact), plus each
+        wake lump at the intensity of its instant."""
+        from repro.core.carbon import J_PER_KWH
+        self._require_signal()
+        sig = self.carbon_signal
+        total = sum(iv.power_w * sig.integral(self.region_of(iv.node),
+                                              iv.start_s, iv.end_s)
+                    for iv in self.state_intervals)
+        total += sum(w.energy_j * sig.intensity(self.region_of(w.node), w.t_s)
+                     for w in self.wake_transitions)
+        return total / J_PER_KWH
+
+    def fleet_carbon_g(self) -> float:
+        """Whole-fleet carbon: the task-attributed total plus the state
+        ledger's (requires a carbon signal, like :meth:`total_carbon_g`)."""
+        return self.total_carbon_g(None) + self.state_carbon_g()
 
 
 # --- TPU fleet (beyond-paper) ----------------------------------------------

@@ -161,10 +161,16 @@ class GreenPodScheduler:
         util = float(np.mean(_as_table(nodes).cpu_util))
         return adaptive_weights(self.scheme, util, carbon=carbon)
 
-    def select(self, pod: Pod, nodes, now: float = 0.0):
+    def select(self, pod: Pod, nodes, now: float = 0.0, exclude=None):
+        """Best node for one pod; ``exclude`` optionally masks nodes the
+        engine forbids this round (ASLEEP nodes, or WAKING nodes whose
+        ready time would start a deferrable pod past its deadline) — they
+        are treated exactly like capacity-infeasible nodes."""
         t0 = time.perf_counter()
         table = _as_table(nodes)
         valid = table.fits(pod.cpu, pod.mem)
+        if exclude is not None:
+            valid = valid & ~np.asarray(exclude, dtype=bool)
         if not valid.any():
             return None, {"reason": "unschedulable"}
         inten = (self.carbon_signal.intensities(table.region, now)
@@ -218,16 +224,21 @@ class BatchScheduler:
                                 carbon=carbon)
 
     def score_queue(self, pods: Sequence[Pod], nodes,
-                    now: float = 0.0) -> np.ndarray:
+                    now: float = 0.0, exclude=None) -> np.ndarray:
         """(P, N) closeness matrix for the whole queue on one snapshot
         (infeasible nodes are -inf per pod). ``now`` is the decision time
-        the carbon column is evaluated at (ignored without a signal)."""
+        the carbon column is evaluated at (ignored without a signal).
+        ``exclude`` — (N,) or (P, N) bool — masks nodes the engine forbids
+        (sleeping nodes; per-pod deadline-late WAKING nodes), folded into
+        the validity mask every backend already honors."""
         table = _as_table(nodes)
         inten = (self.carbon_signal.intensities(table.region, now)
                  if self.carbon_signal is not None else None)
         mats = decision_matrix_batch(pods, table, carbon_intensity=inten)
         valid = table.fits(np.asarray([p.cpu for p in pods])[:, None],
                            np.asarray([p.mem for p in pods])[:, None])
+        if exclude is not None:
+            valid = valid & ~np.asarray(exclude, dtype=bool)
         w = self.weights(table)
         ws = np.broadcast_to(w, (len(pods), w.shape[0]))
         if self.backend == "numpy":
@@ -259,19 +270,22 @@ class BatchScheduler:
                          f"choose from {BACKENDS}")
 
     def select_many(self, pods: Sequence[Pod], nodes, now: float = 0.0,
-                    blocked: "Sequence[int | None] | None" = None):
+                    blocked: "Sequence[int | None] | None" = None,
+                    exclude=None):
         """Place a queue: returns (assignments, diagnostics) where
         ``assignments[i]`` is the node index for ``pods[i]`` or None.
         ``blocked[i]`` optionally names one node index ``pods[i]`` must not
         take this pass (a node it was just preempted off) — skipped inside
         the greedy ledger walk, so a blocked top choice falls through to
-        the next-ranked node without phantom capacity charges."""
+        the next-ranked node without phantom capacity charges. ``exclude``
+        ((N,) or (P, N) bool) hard-masks nodes out of the scoring validity
+        instead (sleeping / deadline-late nodes, see :meth:`score_queue`)."""
         t0 = time.perf_counter()
         table = _as_table(nodes)
         if not len(pods):
             return [], {"closeness": np.zeros((0, len(table))),
                         "scheduling_time_s": 0.0, "per_pod_time_s": 0.0}
-        cc = self.score_queue(pods, table, now=now)
+        cc = self.score_queue(pods, table, now=now, exclude=exclude)
         order = np.argsort(-cc, kind="stable", axis=-1)
         free_cpu = table.free_cpu.copy()
         free_mem = table.free_mem.copy()
@@ -316,7 +330,7 @@ class DefaultK8sScheduler:
     def __init__(self):
         self.decision_log: list[dict] = []
 
-    def select(self, pod: Pod, nodes, now: float = 0.0):
+    def select(self, pod: Pod, nodes, now: float = 0.0, exclude=None):
         """Vectorized over ``NodeTable`` columns (``nodes`` may be a Node
         list or a prebuilt table): one broadcast pass scores the whole
         fleet, infeasible nodes score -1. Identical plugin arithmetic to
@@ -324,10 +338,13 @@ class DefaultK8sScheduler:
         (the loop's running-max-with-epsilon tie-break, which only diverges
         for score gaps below 1e-12 — see tests/test_scheduler.py pinning).
         ``now`` is accepted for engine-call symmetry and ignored — the
-        baseline is carbon-blind."""
+        baseline is carbon-blind. ``exclude`` masks engine-forbidden nodes
+        (sleeping capacity) exactly like capacity infeasibility."""
         t0 = time.perf_counter()
         table = _as_table(nodes)
         fits = table.fits(pod.cpu, pod.mem)
+        if exclude is not None:
+            fits = fits & ~np.asarray(exclude, dtype=bool)
         if not fits.any():
             return None, {"reason": "unschedulable"}
         cpu_frac = (table.reserved_cpu + table.used_cpu + pod.cpu) / table.vcpus
