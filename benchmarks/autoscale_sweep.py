@@ -40,10 +40,12 @@ can exercise the whole elastic path in seconds.
 """
 from __future__ import annotations
 
-import argparse
-import json
 import math
 
+try:
+    from benchmarks import common
+except ImportError:          # run as a script: benchmarks/ is sys.path[0]
+    import common
 from repro.core.carbon import CarbonPolicy, ConstantCarbon
 from repro.core.elastic import AutoscalePolicy, always_on_fleet_idle_kj
 from repro.cluster.node import make_scenario_cluster
@@ -52,7 +54,7 @@ from repro.cluster.workload import PoissonArrivals
 
 DEFAULT_PROFILES = ("mixed", "edge_heavy")
 DEFAULT_NODES = (16, 64)
-DEFAULT_BACKENDS = ("numpy", "jax")
+DEFAULT_BACKENDS = common.DEFAULT_BACKENDS
 CARBON_INTENSITY = 400.0          # flat gCO2/kWh: accounting only
 DEADLINE_S = 900.0
 
@@ -141,20 +143,18 @@ def run(profiles=DEFAULT_PROFILES, node_counts=DEFAULT_NODES,
     results = []
     print("profile,n_nodes,policy,backend,pods,fleet_idle_kJ,fleet_kJ,"
           "delay_s,wakes,sleeps,migr")
-    for profile in profiles:
-        for n in node_counts:
-            for policy_name in policies:
-                for backend in backends:
-                    rec = run_cell(profile, n, policy_name, backend,
-                                   n_bursts, burst_size, seed=seed)
-                    results.append(rec)
-                    print(f"{profile},{n},{policy_name},{backend},"
-                          f"{rec['pods']},"
-                          f"{rec['fleet_idle_energy_kj']:.4f},"
-                          f"{rec['fleet_energy_kj']:.4f},"
-                          f"{rec['mean_start_delay_s']:.2f},"
-                          f"{rec['wakes']},{rec['sleeps']},"
-                          f"{rec['migrations']}")
+    for profile, n, policy_name, backend in common.iter_cells(
+            profiles, node_counts, policies, backends):
+        rec = run_cell(profile, n, policy_name, backend,
+                       n_bursts, burst_size, seed=seed)
+        results.append(rec)
+        print(f"{profile},{n},{policy_name},{backend},"
+              f"{rec['pods']},"
+              f"{rec['fleet_idle_energy_kj']:.4f},"
+              f"{rec['fleet_energy_kj']:.4f},"
+              f"{rec['mean_start_delay_s']:.2f},"
+              f"{rec['wakes']},{rec['sleeps']},"
+              f"{rec['migrations']}")
     # headline: fleet idle-energy reduction vs the no-policy baseline
     summary = []
     by_key = {(r["profile"], r["n_nodes"], r["backend"], r["policy"]): r
@@ -188,43 +188,18 @@ def run(profiles=DEFAULT_PROFILES, node_counts=DEFAULT_NODES,
                          "carbon_intensity": CARBON_INTENSITY},
               "results": results,
               "idle_reduction_summary": summary}
-    if out:
-        with open(out, "w") as f:
-            json.dump(report, f, indent=1)
-        print(f"wrote {out}")
-    return report
+    return common.write_report(report, out)
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--smoke", action="store_true",
-                    help="tiny fleet, few events (CI lane); other flags "
-                         "still apply, only the scenario sizes shrink")
-    ap.add_argument("--backend", default="all",
-                    help=f"all (= {','.join(DEFAULT_BACKENDS)}; pallas is "
-                         "opt-in, interpret mode is slow on CPU) or a "
-                         "comma-list from numpy,jax,pallas")
-    ap.add_argument("--profiles", default=",".join(DEFAULT_PROFILES))
-    ap.add_argument("--nodes", default=",".join(map(str, DEFAULT_NODES)))
-    ap.add_argument("--policies", default=",".join(POLICIES))
-    ap.add_argument("--bursts", type=int, default=8)
-    ap.add_argument("--burst-size", type=int, default=16)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--out", default="BENCH_autoscale.json")
+    ap = common.sweep_parser("BENCH_autoscale.json", DEFAULT_PROFILES,
+                             DEFAULT_NODES, policies=tuple(POLICIES))
     args = ap.parse_args()
-    backends = (DEFAULT_BACKENDS if args.backend == "all"
-                else tuple(b for b in args.backend.split(",") if b))
-    profiles = tuple(p for p in args.profiles.split(",") if p)
-    policies = tuple(p for p in args.policies.split(",") if p)
-    if args.smoke:
-        run(profiles=profiles[:1], node_counts=(8,), policies=policies,
-            backends=backends, n_bursts=3, burst_size=4,
-            seed=args.seed, out=args.out)
-        return
-    run(profiles=profiles,
-        node_counts=tuple(int(x) for x in args.nodes.split(",") if x),
-        policies=policies, backends=backends, n_bursts=args.bursts,
-        burst_size=args.burst_size, seed=args.seed, out=args.out)
+    profiles = common.split_csv(args.profiles)
+    run(profiles=profiles[:1] if args.smoke else profiles,
+        policies=common.split_csv(args.policies),
+        backends=common.resolve_backends(args.backend),
+        seed=args.seed, out=args.out, **common.sweep_sizes(args))
 
 
 if __name__ == "__main__":

@@ -26,9 +26,12 @@ can exercise the whole carbon path in seconds.
 """
 from __future__ import annotations
 
-import argparse
-import json
+import itertools
 
+try:
+    from benchmarks import common
+except ImportError:          # run as a script: benchmarks/ is sys.path[0]
+    import common
 from repro.core.carbon import CarbonPolicy, diurnal_fleet_signal
 from repro.cluster.node import DEFAULT_REGIONS, make_scenario_cluster
 from repro.cluster.simulator import run_scenario
@@ -38,7 +41,7 @@ DEFAULT_PROFILES = ("mixed", "edge_heavy")
 DEFAULT_NODES = (16, 64)
 DEFAULT_SCHEMES = ("energy_centric", "carbon_energy_balanced",
                    "carbon_centric")
-DEFAULT_BACKENDS = ("numpy", "jax")
+DEFAULT_BACKENDS = common.DEFAULT_BACKENDS
 
 # Signal: one sinusoidal "day" compressed to 30 min so a few-minute
 # scenario sees real intensity movement. The global phase puts every
@@ -129,23 +132,21 @@ def run(profiles=DEFAULT_PROFILES, node_counts=DEFAULT_NODES,
     results, checks = [], []
     print("profile,n_nodes,scheme,backend,pods,E_topsis_kJ,C_topsis_g,"
           "defer_s,preempt")
-    for profile in profiles:
-        for n in node_counts:
-            for scheme in schemes:
-                for backend in backends:
-                    rec = run_cell(profile, n, scheme, backend,
-                                   n_bursts, burst_size, seed=seed)
-                    results.append(rec)
-                    print(f"{profile},{n},{scheme},{backend},"
-                          f"{rec['pods']},{rec['energy_topsis_kj']:.4f},"
-                          f"{rec['carbon_topsis_g']:.4f},"
-                          f"{rec['mean_deferral_latency_s']:.1f},"
-                          f"{rec['preemptions']}")
-            checks.append(run_zero_weight_check(profile, n, backends[0],
-                                                n_bursts, burst_size,
-                                                seed=seed))
-            print(f"{profile},{n}: zero-carbon-weight run matches the "
-                  f"carbon-free engine bitwise")
+    for profile, n in itertools.product(profiles, node_counts):
+        for scheme, backend in itertools.product(schemes, backends):
+            rec = run_cell(profile, n, scheme, backend,
+                           n_bursts, burst_size, seed=seed)
+            results.append(rec)
+            print(f"{profile},{n},{scheme},{backend},"
+                  f"{rec['pods']},{rec['energy_topsis_kj']:.4f},"
+                  f"{rec['carbon_topsis_g']:.4f},"
+                  f"{rec['mean_deferral_latency_s']:.1f},"
+                  f"{rec['preemptions']}")
+        checks.append(run_zero_weight_check(profile, n, backends[0],
+                                            n_bursts, burst_size,
+                                            seed=seed))
+        print(f"{profile},{n}: zero-carbon-weight run matches the "
+              f"carbon-free engine bitwise")
     # headline: carbon_centric vs energy_centric carbon reduction per cell
     summary = []
     by_key = {(r["profile"], r["n_nodes"], r["backend"], r["scheme"]): r
@@ -174,43 +175,18 @@ def run(profiles=DEFAULT_PROFILES, node_counts=DEFAULT_NODES,
               "results": results,
               "zero_weight_checks": checks,
               "carbon_reduction_summary": summary}
-    if out:
-        with open(out, "w") as f:
-            json.dump(report, f, indent=1)
-        print(f"wrote {out}")
-    return report
+    return common.write_report(report, out)
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--smoke", action="store_true",
-                    help="tiny fleet, few events (CI lane); other flags "
-                         "still apply, only the scenario sizes shrink")
-    ap.add_argument("--backend", default="all",
-                    help=f"all (= {','.join(DEFAULT_BACKENDS)}; pallas is "
-                         "opt-in, interpret mode is slow on CPU) or a "
-                         "comma-list from numpy,jax,pallas")
-    ap.add_argument("--profiles", default=",".join(DEFAULT_PROFILES))
-    ap.add_argument("--nodes", default=",".join(map(str, DEFAULT_NODES)))
-    ap.add_argument("--schemes", default=",".join(DEFAULT_SCHEMES))
-    ap.add_argument("--bursts", type=int, default=8)
-    ap.add_argument("--burst-size", type=int, default=16)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--out", default="BENCH_carbon.json")
+    ap = common.sweep_parser("BENCH_carbon.json", DEFAULT_PROFILES,
+                             DEFAULT_NODES, schemes=DEFAULT_SCHEMES)
     args = ap.parse_args()
-    backends = (DEFAULT_BACKENDS if args.backend == "all"
-                else tuple(b for b in args.backend.split(",") if b))
-    profiles = tuple(p for p in args.profiles.split(",") if p)
-    schemes = tuple(s for s in args.schemes.split(",") if s)
-    if args.smoke:
-        run(profiles=profiles[:1], node_counts=(8,), schemes=schemes,
-            backends=backends, n_bursts=3, burst_size=4,
-            seed=args.seed, out=args.out)
-        return
-    run(profiles=profiles,
-        node_counts=tuple(int(x) for x in args.nodes.split(",") if x),
-        schemes=schemes, backends=backends, n_bursts=args.bursts,
-        burst_size=args.burst_size, seed=args.seed, out=args.out)
+    profiles = common.split_csv(args.profiles)
+    run(profiles=profiles[:1] if args.smoke else profiles,
+        schemes=common.split_csv(args.schemes),
+        backends=common.resolve_backends(args.backend),
+        seed=args.seed, out=args.out, **common.sweep_sizes(args))
 
 
 if __name__ == "__main__":

@@ -51,14 +51,32 @@ def _headline(name: str, data: dict) -> dict:
 
 def aggregate(out: str | None = "BENCH_summary.json") -> dict:
     """Fold every recorded BENCH_*.json into one summary dict (and file).
-    Missing sweeps are skipped — run their benchmarks to record them."""
+    Missing or unreadable sweeps are skipped with a warning — run their
+    benchmarks to (re-)record them."""
     summary: dict = {}
     for name in BENCH_FILES:
         if not os.path.exists(name):
+            print(f"warning: {name} not recorded yet — run its sweep "
+                  f"benchmark to record it (skipping)")
             continue
-        with open(name) as f:
-            data = json.load(f)
-        summary[name] = _headline(name, data)
+        try:
+            with open(name) as f:
+                data = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"warning: could not read {name} ({e}) — re-run its "
+                  f"sweep benchmark (skipping)")
+            continue
+        if not isinstance(data, dict) or not isinstance(
+                data.get("results", []), list):
+            print(f"warning: {name} is not a sweep report (expected an "
+                  f"object with a 'results' list) — re-run its sweep "
+                  f"benchmark (skipping)")
+            continue
+        try:
+            summary[name] = _headline(name, data)
+        except (AttributeError, KeyError, TypeError, ZeroDivisionError) as e:
+            print(f"warning: {name} has an unexpected shape ({e!r}) — "
+                  f"re-run its sweep benchmark (skipping)")
     if not summary:
         print("no BENCH_*.json recorded yet; run the sweep benchmarks first")
         return summary

@@ -16,14 +16,15 @@ Run: PYTHONPATH=src python benchmarks/scenario_sweep.py \
         [--bursts 8] [--burst-size 16] [--schemes energy_centric,...] \
         [--out BENCH_scenarios.json]
 
-``--smoke`` shrinks everything (one profile, 8 nodes, 3 bursts of 4) so CI
-can exercise the whole scenario path in seconds.
+``--smoke`` shrinks everything (8 nodes, 3 bursts of 4) so CI can exercise
+the whole scenario path in seconds.
 """
 from __future__ import annotations
 
-import argparse
-import json
-
+try:
+    from benchmarks import common
+except ImportError:          # run as a script: benchmarks/ is sys.path[0]
+    import common
 from repro.cluster.node import SCENARIO_PROFILES, make_scenario_cluster
 from repro.cluster.simulator import run_scenario
 from repro.cluster.workload import PoissonArrivals
@@ -31,7 +32,7 @@ from repro.cluster.workload import PoissonArrivals
 DEFAULT_PROFILES = tuple(SCENARIO_PROFILES)
 DEFAULT_NODES = (16, 256)
 DEFAULT_SCHEMES = ("energy_centric", "performance_centric")
-DEFAULT_BACKENDS = ("numpy", "jax")
+DEFAULT_BACKENDS = common.DEFAULT_BACKENDS
 
 
 def run_cell(profile: str, n_nodes: int, scheme: str, backend: str,
@@ -67,18 +68,16 @@ def run(profiles=DEFAULT_PROFILES, node_counts=DEFAULT_NODES,
     results = []
     print("profile,n_nodes,scheme,backend,pods,unsched_rate,"
           "E_topsis_kJ,E_default_kJ,sched_ms_topsis")
-    for profile in profiles:
-        for n in node_counts:
-            for scheme in schemes:
-                for backend in backends:
-                    rec = run_cell(profile, n, scheme, backend,
-                                   n_bursts, burst_size, seed=seed)
-                    results.append(rec)
-                    print(f"{profile},{n},{scheme},{backend},"
-                          f"{rec['pods']},{rec['unschedulable_rate']:.3f},"
-                          f"{rec['energy_topsis_kj']:.4f},"
-                          f"{rec['energy_default_kj']:.4f},"
-                          f"{rec['mean_sched_time_topsis_ms']:.3f}")
+    for profile, n, scheme, backend in common.iter_cells(
+            profiles, node_counts, schemes, backends):
+        rec = run_cell(profile, n, scheme, backend,
+                       n_bursts, burst_size, seed=seed)
+        results.append(rec)
+        print(f"{profile},{n},{scheme},{backend},"
+              f"{rec['pods']},{rec['unschedulable_rate']:.3f},"
+              f"{rec['energy_topsis_kj']:.4f},"
+              f"{rec['energy_default_kj']:.4f},"
+              f"{rec['mean_sched_time_topsis_ms']:.3f}")
     report = {"bench": "scenario_sweep",
               "config": {"profiles": list(profiles),
                          "node_counts": list(node_counts),
@@ -87,43 +86,17 @@ def run(profiles=DEFAULT_PROFILES, node_counts=DEFAULT_NODES,
                          "n_bursts": n_bursts, "burst_size": burst_size,
                          "seed": seed},
               "results": results}
-    if out:
-        with open(out, "w") as f:
-            json.dump(report, f, indent=1)
-        print(f"wrote {out}")
-    return report
+    return common.write_report(report, out)
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--smoke", action="store_true",
-                    help="tiny fleet, few events (CI lane); other flags "
-                         "still apply, only the scenario sizes shrink")
-    ap.add_argument("--backend", default="all",
-                    help=f"all (= {','.join(DEFAULT_BACKENDS)}; pallas is "
-                         "opt-in, interpret mode is slow on CPU) or a "
-                         "comma-list from numpy,jax,pallas")
-    ap.add_argument("--profiles", default=",".join(DEFAULT_PROFILES))
-    ap.add_argument("--nodes", default=",".join(map(str, DEFAULT_NODES)))
-    ap.add_argument("--schemes", default=",".join(DEFAULT_SCHEMES))
-    ap.add_argument("--bursts", type=int, default=8)
-    ap.add_argument("--burst-size", type=int, default=16)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--out", default="BENCH_scenarios.json")
+    ap = common.sweep_parser("BENCH_scenarios.json", DEFAULT_PROFILES,
+                             DEFAULT_NODES, schemes=DEFAULT_SCHEMES)
     args = ap.parse_args()
-    backends = (DEFAULT_BACKENDS if args.backend == "all"
-                else tuple(b for b in args.backend.split(",") if b))
-    profiles = tuple(p for p in args.profiles.split(",") if p)
-    schemes = tuple(s for s in args.schemes.split(",") if s)
-    if args.smoke:
-        run(profiles=profiles, node_counts=(8,), schemes=schemes,
-            backends=backends, n_bursts=3, burst_size=4,
-            seed=args.seed, out=args.out)
-        return
-    run(profiles=profiles,
-        node_counts=tuple(int(x) for x in args.nodes.split(",") if x),
-        schemes=schemes, backends=backends, n_bursts=args.bursts,
-        burst_size=args.burst_size, seed=args.seed, out=args.out)
+    run(profiles=common.split_csv(args.profiles),
+        schemes=common.split_csv(args.schemes),
+        backends=common.resolve_backends(args.backend),
+        seed=args.seed, out=args.out, **common.sweep_sizes(args))
 
 
 if __name__ == "__main__":

@@ -25,11 +25,14 @@ from __future__ import annotations
 
 import argparse
 import itertools
-import json
 import time
 
 import numpy as np
 
+try:
+    from benchmarks import common
+except ImportError:          # run as a script: benchmarks/ is sys.path[0]
+    import common
 from repro.core.scheduler import BACKENDS, BatchScheduler, GreenPodScheduler
 from repro.cluster.node import make_fleet
 from repro.cluster.workload import WORKLOADS, Pod
@@ -104,11 +107,7 @@ def run(backends=BACKENDS, node_counts=DEFAULT_NODES, n_pods: int = 64,
                          "node_counts": list(node_counts),
                          "backends": list(backends)},
               "results": results}
-    if out:
-        with open(out, "w") as f:
-            json.dump(report, f, indent=1)
-        print(f"wrote {out}")
-    return report
+    return common.write_report(report, out)
 
 
 def main():
@@ -121,8 +120,8 @@ def main():
     ap.add_argument("--reps", type=int, default=10)
     ap.add_argument("--out", default="BENCH_scheduling.json")
     args = ap.parse_args()
-    backends = BACKENDS if args.backend == "all" else (args.backend,)
-    node_counts = tuple(int(x) for x in args.nodes.split(",") if x)
+    backends = common.resolve_backends(args.backend, default=BACKENDS)
+    node_counts = common.split_csv_int(args.nodes)
     run(backends=backends, node_counts=node_counts, n_pods=args.pods,
         reps=args.reps, out=args.out)
 

@@ -93,9 +93,15 @@ res = run_scenario(arrivals, "energy_centric",
                    batch=True, batch_backend="jax")
 print(f"\n--- event-driven scenario: {arrivals.total_pods()} pods in "
       f"{arrivals.n_bursts} Poisson bursts on 64 edge-heavy nodes")
-print(f"  unschedulable rate: {res.unschedulable_rate():.3f}   "
-      f"TOPSIS {res.energy_kj('topsis'):.2f} kJ vs "
-      f"default {res.energy_kj('default'):.2f} kJ")
+# SimResult.summary() rolls up the per-scheduler metrics the sweeps record
+summary = res.summary()
+sched_stats = summary["schedulers"]
+print(f"  unschedulable rate: {summary['unschedulable_rate']:.3f}   "
+      f"TOPSIS {sched_stats['topsis']['energy_kj']:.2f} kJ vs "
+      f"default {sched_stats['default']['energy_kj']:.2f} kJ")
+print(f"  TOPSIS per-pod mean: {sched_stats['topsis']['mean_energy_kj']:.3f} kJ, "
+      f"{sched_stats['topsis']['mean_sched_time_ms']:.2f} ms/decision, "
+      f"allocation {sched_stats['topsis']['allocation']}")
 edges, joules = res.energy_series("topsis")
 for k in range(0, len(edges), max(1, len(edges) // 6)):
     print(f"  t={edges[k]:8.1f}s  cumulative TOPSIS energy "
@@ -119,8 +125,8 @@ policy = CarbonPolicy(signal, defer_threshold=300.0,
 carbon_arrivals = lambda: PoissonArrivals(
     rate_per_s=0.2, n_bursts=6, burst_size=12, seed=0,
     deferrable_share=0.5, deadline_s=period / 2.0)
-print(f"\n--- carbon-aware scenario: staggered diurnal signal on 64 mixed "
-      f"nodes")
+print("\n--- carbon-aware scenario: staggered diurnal signal on 64 mixed "
+      "nodes")
 for scheme in ("energy_centric", "carbon_centric"):
     res = run_scenario(carbon_arrivals(), scheme,
                        cluster_factory=lambda: make_scenario_cluster(
@@ -148,7 +154,7 @@ from repro.core.elastic import AutoscalePolicy, always_on_fleet_idle_kj
 elastic_arrivals = lambda: PoissonArrivals(rate_per_s=0.2, n_bursts=6,
                                            burst_size=12, seed=0)
 mixed_fleet = lambda: make_scenario_cluster("mixed", 64, seed=0)
-print(f"\n--- elastic fleet: idle-timeout + consolidation on 64 mixed nodes")
+print("\n--- elastic fleet: idle-timeout + consolidation on 64 mixed nodes")
 runs = {}
 for name, pol in (
         ("no policy (always-on)", None),

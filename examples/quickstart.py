@@ -28,7 +28,7 @@ print(f"\nGreenPod (energy-centric) binds the pod to: {nodes[idx].name} "
 res = run_experiment("medium", "energy_centric")
 dk = res.mean_energy_kj("default")
 tk = res.mean_energy_kj("topsis")
-print(f"\nmedium competition, energy-centric profile:")
+print("\nmedium competition, energy-centric profile:")
 print(f"  default K8s : {dk:.4f} kJ/pod")
 print(f"  GreenPod    : {tk:.4f} kJ/pod")
 print(f"  energy optimization: {100 * (dk - tk) / dk:.2f}% "

@@ -119,7 +119,6 @@ if __name__ == "__main__":
 def refine(iters: int = 1200, seed: int = 1) -> None:
     """Second pass: seed from calibrated_params.json, add physical-ordering
     penalties (frugal A < B < C in dynamic power; C fastest)."""
-    import os
     rng = np.random.default_rng(seed)
     with open("scripts/calibrated_params.json") as f:
         best = json.load(f)["params"]

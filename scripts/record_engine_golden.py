@@ -1,0 +1,69 @@
+"""Record golden event-engine outputs for the kernel-refactor pin.
+
+Runs the four policy combinations (policy-free, carbon-only,
+autoscale-only, carbon+autoscale) over the shared recorded scenario
+(tests/engine_golden_spec.py — one source for both this recorder and the
+pinning tests) on every backend, and writes placements, start/runtimes,
+energy/carbon totals, and event counters to
+tests/golden_engine_scenarios.json. tests/test_engine.py asserts the
+engine reproduces the file bitwise; re-record only on an *intentional*
+behaviour change, and say so in the PR.
+
+Run: PYTHONPATH=src python scripts/record_engine_golden.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+_TESTS_DIR = os.path.join(os.path.dirname(__file__), os.pardir, "tests")
+sys.path.insert(0, _TESTS_DIR)
+
+from engine_golden_spec import SCENARIOS, run_cell   # noqa: E402
+
+BACKENDS = ("numpy", "jax", "pallas")
+
+
+def run_one(name: str, backend: str) -> dict:
+    res = run_cell(name, backend)
+    out = {
+        "nodes": [r.node for r in res.records],
+        "uids": [r.pod.uid for r in res.records],
+        "start_s": [r.start_s for r in res.records],
+        "runtime_s": [r.runtime_s for r in res.records],
+        "energy_topsis_kj": res.energy_kj("topsis"),
+        "energy_default_kj": res.energy_kj("default"),
+        "unschedulable": res.unschedulable,
+        "preemptions": res.preemptions,
+        "migrations": res.migrations,
+        "wakes": res.wakes,
+        "sleeps": res.sleeps,
+    }
+    if SCENARIOS[name]["carbon"]:
+        out["carbon_topsis_g"] = res.total_carbon_g("topsis")
+        out["mean_deferral_latency_s"] = res.mean_deferral_latency_s("topsis")
+    if SCENARIOS[name]["autoscale"]:
+        out["fleet_idle_energy_kj"] = res.fleet_idle_energy_kj()
+        out["state_energy_kj"] = res.state_energy_kj()
+    return out
+
+
+def main() -> None:
+    golden: dict = {"config": {"profile": "mixed", "n_nodes": 8,
+                               "fleet_seed": 3, "arrival_seed": 7,
+                               "n_bursts": 3, "burst_size": 4,
+                               "scheme": "energy_centric"},
+                    "runs": {}}
+    for name in SCENARIOS:
+        for backend in BACKENDS:
+            print(f"recording {name} / {backend} ...")
+            golden["runs"][f"{name}/{backend}"] = run_one(name, backend)
+    path = os.path.join(_TESTS_DIR, "golden_engine_scenarios.json")
+    with open(path, "w") as f:
+        json.dump(golden, f, indent=1, sort_keys=True)
+    print(f"wrote {os.path.normpath(path)}")
+
+
+if __name__ == "__main__":
+    main()

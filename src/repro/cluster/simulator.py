@@ -1,297 +1,47 @@
-"""Event-driven cluster simulation engine.
+"""Scenario driver over the discrete-event simulation kernel.
 
-The paper's factorial experiment (§IV) is one point in this engine's input
-space: every pod arriving at t=0 (``PaperArrivals``) on the 4-node Table-I
-cluster. The engine itself consumes any ``ArrivalProcess`` — Poisson bursts,
-replayed JSON traces — over any fleet (``make_scenario_cluster`` builds
-edge-heavy / cloud-heavy / mixed fleets up to 8192 nodes), and accounts
-energy on a per-node power-state timeline (``repro.core.energy.PowerTimeline``)
-instead of a post-hoc interval union, so every run yields energy-vs-time
-series per scheduler in addition to the paper's scalar totals (Table IV
-metric definitions).
+The actual event loop lives in ``repro.cluster.engine``: a kernel that owns
+the typed event clock (ARRIVAL / COMPLETION / CARBON_CHECK / WAKE_DONE /
+CONSOLIDATE_TICK), the explicit :class:`~repro.cluster.engine.SimState`
+(pending queue, running-task heap, records, power timeline), and the
+scheduling round. Everything scenario-specific plugs in through the
+``SchedulingPolicy`` hook protocol (``repro.core.policy``):
 
-Event loop semantics (kube-scheduler backoff-and-retry, idealized): a
-scheduling round places every pending pod it can against current cluster
-state; pods that do not fit wait in a FIFO queue and are retried whenever a
-running pod completes or a new burst arrives. With ``PaperArrivals`` this
-reduces exactly to the legacy all-at-t0 loop — ``table6()`` reproduces the
-pre-refactor paper-mode output bitwise (tests/test_scenarios.py pins it
-against the recorded golden).
+* ``CarbonScheduling`` (``repro.core.carbon``) — temporal shifting:
+  deferrable pods wait, bounded by their deadline, for the fleet-minimum
+  grid intensity to dip; running deferrable tasks are preempted off
+  spiking regions (once per pod), their timeline segments truncated at the
+  eviction instant.
+* ``AutoscaleScheduling`` (``repro.core.elastic``) — the node power-state
+  lifecycle: idle-timeout sleep, queue-pressure wakes of the TOPSIS-best
+  sleeping node, and periodic consolidation drains through the same
+  truncate-and-requeue machinery.
 
-Carbon-aware temporal shifting (``carbon=CarbonPolicy(...)``) adds two
-event kinds on top: *deferral* — a deferrable pod waits, bounded by its
-deadline, for the fleet-minimum grid intensity to dip below the policy
-threshold, with carbon-check wake events at the policy cadence (and always
-exactly at a waiting pod's deadline) — and *preemption* — a running
-deferrable task is evicted and requeued (at most once, never past its
-deadline) when its node's regional intensity spikes above the preemption
-threshold; its power-timeline segment is truncated at the eviction instant
-so the energy/carbon interval splits between the partial and requeued runs.
-Without a policy the loop is byte-for-byte the legacy one.
+This module is the thin driver: :func:`run_scenario` keeps its original
+signature, maps the ``carbon=`` / ``autoscale=`` knob dataclasses onto an
+ordered policy list, and hands the run to :func:`repro.cluster.engine.
+simulate`. Composing future policies (cost-benefit drain, predictive wake)
+means appending to that list — not threading more state through an engine
+function.
 
-Elastic fleet events (``autoscale=AutoscalePolicy(...)``,
-``repro.core.elastic``) give nodes a power-state lifecycle on top: *sleep*
-— a node empty past the idle timeout falls ASLEEP lazily (no event needed;
-rounds simply see it excluded and the state ledger records the transition
-exactly); *wake* — pods that end a round unplaced wake the TOPSIS-best
-sleeping node (a real event: the round re-runs when the wake completes,
-and pods committed to a still-WAKING node start exactly at its ready
-instant, never past a deferrable pod's deadline); *drain* — the periodic
-consolidation pass evicts and requeues every task of a low-utilization
-node through the same truncate-and-requeue machinery preemption uses, then
-puts the node straight to sleep. State-dependent idle power, sleep
-residuals, and wake surges land on the run's ``PowerTimeline`` state
-ledger (``fleet_idle_energy_kj`` / ``fleet_carbon_g``). With
-``autoscale=None`` none of this machinery runs and the engine reproduces
-the policy-free output bitwise.
+The paper's factorial experiment (§IV) is one point in the input space:
+every pod arriving at t=0 (``PaperArrivals``) on the 4-node Table-I
+cluster, no policies. ``table6()`` routes through this driver and
+reproduces the pre-refactor paper-mode output bitwise
+(tests/test_scenarios.py pins it against the recorded golden; the full
+policy matrix is pinned by tests/test_engine.py against
+tests/golden_engine_scenarios.json).
 """
 from __future__ import annotations
 
-import dataclasses
-import heapq
-import math
 from typing import Callable
 
-import numpy as np
-
-from repro.core.carbon import CarbonPolicy
-from repro.core.elastic import AutoscalePolicy, ElasticFleet
-from repro.core.energy import (NODE_ENERGY_PROFILES, PowerTimeline,
-                               task_energy_joules)
-from repro.core.scheduler import (BatchScheduler, DefaultK8sScheduler,
-                                  GreenPodScheduler, predict_exec_time)
+from repro.core.carbon import CarbonPolicy, CarbonScheduling
+from repro.core.elastic import AutoscalePolicy, AutoscaleScheduling
+from repro.cluster.engine import (PodRecord, SimResult,  # noqa: F401
+                                  simulate)              # (re-exported)
 from repro.cluster.node import Node, make_paper_cluster
-from repro.cluster.workload import ArrivalProcess, PaperArrivals, Pod
-
-
-@dataclasses.dataclass
-class PodRecord:
-    pod: Pod
-    node: str
-    node_class: str
-    start_s: float
-    runtime_s: float
-    energy_j: float
-    scheduling_time_s: float
-    arrival_s: float = 0.0      # burst arrival time (deferral latency basis)
-
-
-@dataclasses.dataclass
-class SimResult:
-    records: list[PodRecord]
-    unschedulable: int
-    timeline: PowerTimeline | None = None
-    preemptions: int = 0
-    # elastic fleet counters (autoscale runs; zero otherwise)
-    migrations: int = 0        # tasks drained off consolidated nodes
-    wakes: int = 0             # ASLEEP -> WAKING transitions
-    sleeps: int = 0            # falls asleep (idle timeout or drain)
-
-    def _timeline(self) -> PowerTimeline:
-        """The run's power timeline (rebuilt from records for results
-        constructed without one)."""
-        if self.timeline is None:
-            self.timeline = PowerTimeline()
-            for r in self.records:
-                self.timeline.add(r.node, r.node_class, r.pod.scheduler,
-                                  r.start_s, r.runtime_s,
-                                  r.energy_j / r.runtime_s if r.runtime_s
-                                  else 0.0)
-        return self.timeline
-
-    def energy_kj(self, scheduler: str) -> float:
-        """Node-level energy attributed to a scheduler: per-pod dynamic energy
-        plus each node's idle power for the union time that scheduler's pods
-        keep the node awake (Table IV: 'efficiency of scheduling decisions
-        from an energy optimization perspective') — now read off the
-        power-state timeline."""
-        return self._timeline().energy_kj(scheduler)
-
-    def energy_series(self, scheduler: str | None = None):
-        """Time-resolved cumulative energy ``(edges_s, joules)`` for one
-        scheduler (or the whole cluster when None)."""
-        return self._timeline().energy_series(scheduler)
-
-    def power_series(self, scheduler: str | None = None):
-        """Piecewise-constant total power ``(edges_s, watts)``."""
-        return self._timeline().power_series(scheduler)
-
-    def total_carbon_g(self, scheduler: str | None = None) -> float:
-        """Operational carbon (gCO2) off the power timeline — requires the
-        run to have had a CarbonPolicy (signal attached to the timeline)."""
-        return self._timeline().total_carbon_g(scheduler)
-
-    def carbon_series(self, scheduler: str | None = None):
-        """Time-resolved cumulative carbon ``(edges_s, grams)``."""
-        return self._timeline().carbon_series(scheduler)
-
-    def fleet_idle_energy_kj(self) -> float:
-        """Every joule the fleet drew that is not task dynamic power:
-        busy-union idle + power-state ledger (IDLE/ASLEEP/WAKING draw) +
-        wake surges. On a run without an AutoscalePolicy the state ledger
-        is empty and this reduces to the busy-union idle total — which
-        *excludes* empty nodes' draw; when comparing a policy run against
-        a no-policy baseline, use
-        ``repro.core.elastic.always_on_fleet_idle_kj`` for the baseline
-        side."""
-        return self._timeline().fleet_idle_energy_kj()
-
-    def fleet_energy_kj(self) -> float:
-        """Whole-fleet energy: dynamic + :meth:`fleet_idle_energy_kj`."""
-        return self._timeline().fleet_energy_kj()
-
-    def state_energy_kj(self, state: str | None = None) -> float:
-        """Energy drawn in one power state (or all, state=None) off the
-        elastic state ledger, in kJ."""
-        return self._timeline().state_energy_j(state) / 1000.0
-
-    def fleet_carbon_g(self) -> float:
-        """Whole-fleet carbon including the state ledger (needs a carbon
-        signal on the run, like :meth:`total_carbon_g`)."""
-        return self._timeline().fleet_carbon_g()
-
-    def mean_deferral_latency_s(self, scheduler: str | None = None) -> float:
-        """Mean wait between arrival and *first* start over deferrable pods
-        (a preempted pod's requeued record does not reset its latency)."""
-        first: dict[int, PodRecord] = {}
-        for r in self.records:
-            if not r.pod.deferrable:
-                continue
-            if scheduler is not None and r.pod.scheduler != scheduler:
-                continue
-            cur = first.get(r.pod.uid)
-            if cur is None or r.start_s < cur.start_s:
-                first[r.pod.uid] = r
-        if not first:
-            return 0.0
-        return float(np.mean([r.start_s - r.arrival_s
-                              for r in first.values()]))
-
-    def mean_energy_kj(self, scheduler: str) -> float:
-        """Per-pod average energy — the unit of paper Table VI (its kJ values
-        decrease from low→high competition while pod counts grow ~3x, which is
-        only consistent with a per-pod average). A preempted pod has one
-        record per run attempt but counts once."""
-        n = len({r.pod.uid for r in self.records
-                 if r.pod.scheduler == scheduler})
-        return self.energy_kj(scheduler) / n if n else 0.0
-
-    def mean_sched_time_ms(self, scheduler: str) -> float:
-        """Mean scheduling time per *attempt* (a preempted pod's requeued
-        placement is a real second scheduling decision)."""
-        ts = [r.scheduling_time_s for r in self.records
-              if r.pod.scheduler == scheduler]
-        return 1000.0 * float(np.mean(ts)) if ts else 0.0
-
-    def mean_exec_time_s(self, scheduler: str) -> float:
-        """Mean total time-on-cluster per pod (a preempted pod's truncated
-        partial run and its rerun sum into one pod's total)."""
-        totals: dict[int, float] = {}
-        for r in self.records:
-            if r.pod.scheduler == scheduler:
-                totals[r.pod.uid] = totals.get(r.pod.uid, 0.0) + r.runtime_s
-        return float(np.mean(list(totals.values()))) if totals else 0.0
-
-    def unschedulable_rate(self) -> float:
-        total = len({r.pod.uid for r in self.records}) + self.unschedulable
-        return self.unschedulable / total if total else 0.0
-
-    def allocation(self, scheduler: str) -> dict[str, int]:
-        out: dict[str, int] = {}
-        for r in self.records:
-            if r.pod.scheduler == scheduler:
-                out[r.node_class] = out.get(r.node_class, 0) + 1
-        return out
-
-
-def _commit(pod: Pod, idx: int, nodes: list[Node], t: float,
-            sched_time_s: float, records: list[PodRecord],
-            running: list, timeline: PowerTimeline,
-            arrival_s: float = 0.0, efleet: ElasticFleet | None = None) -> None:
-    """Bind pod to nodes[idx], append its record + completion event, and
-    post the task segment to the power timeline. The running-heap entry
-    carries the record and segment indices so a preemption can truncate
-    both at the eviction instant. With an elastic fleet the task's start is
-    its *effective* start — delayed to the wake-completion instant when the
-    chosen node is still WAKING."""
-    node = nodes[idx]
-    node.bind(pod.cpu, pod.mem)
-    start = efleet.on_commit(idx, t) if efleet is not None else t
-    rt = predict_exec_time(pod, node)
-    ej = task_energy_joules(node.node_class, rt, pod.cpu)
-    records.append(PodRecord(pod, node.name, node.node_class, start, rt,
-                             ej, sched_time_s, arrival_s))
-    timeline.add(node.name, node.node_class, pod.scheduler, start, rt,
-                 NODE_ENERGY_PROFILES[node.node_class]["dyn_power_per_vcpu"]
-                 * pod.cpu)
-    heapq.heappush(running, (start + rt, pod.uid, pod, idx,
-                             len(records) - 1, len(timeline.segments) - 1))
-
-
-def _pop_release(running: list, nodes: list[Node],
-                 efleet: ElasticFleet | None = None) -> float:
-    """Pop the earliest completion, release its resources, return its end
-    time (the backoff/retry step)."""
-    end_t, _, done, idx, _, _ = heapq.heappop(running)
-    nodes[idx].release(done.cpu, done.mem)
-    if efleet is not None:
-        efleet.on_complete(idx, end_t)
-    return end_t
-
-
-def _evict(victims: list[tuple], t: float, running: list, nodes: list[Node],
-           records: list[PodRecord], timeline: PowerTimeline,
-           efleet: ElasticFleet | None = None) -> list[Pod]:
-    """Evict running-heap entries at instant ``t`` (carbon preemption or a
-    consolidation drain): release resources, truncate each victim's record
-    and power segment at ``t``, and return the pods to requeue. A victim
-    committed to a still-WAKING node has ``start_s > t`` — it never ran, so
-    its partial attempt clamps to zero runtime/energy."""
-    gone = {e[1] for e in victims}
-    running[:] = [e for e in running if e[1] not in gone]
-    heapq.heapify(running)
-    pods: list[Pod] = []
-    for _, uid, pod, idx, rec_i, seg_i in victims:
-        nodes[idx].release(pod.cpu, pod.mem)
-        if efleet is not None:
-            efleet.on_evict(idx, t)
-        rec = records[rec_i]
-        elapsed = max(t - rec.start_s, 0.0)
-        rec.runtime_s = elapsed
-        rec.energy_j = timeline.segments[seg_i].dyn_power_w * elapsed
-        timeline.truncate(seg_i, t)
-        pods.append(pod)
-    return pods
-
-
-def run_burst(pods: list[Pod], nodes: list[Node], sched: BatchScheduler,
-              t: float, records: list[PodRecord], running: list,
-              timeline: PowerTimeline,
-              arrive: dict[int, float] | None = None,
-              block: dict[int, int] | None = None,
-              exclude=None, efleet: ElasticFleet | None = None) -> list[Pod]:
-    """Schedule an arrival burst through one batched scoring pass
-    (``BatchScheduler.select_many``) and commit the assignments. Returns
-    the pods that did not fit. ``block`` maps pod uid -> a node index the
-    pod must not be committed to this round (the node it was just
-    preempted off — an instant same-node restart would discard the partial
-    run for nothing); the exclusion happens inside ``select_many``'s
-    greedy ledger, so a blocked top choice falls through to the pod's
-    next-ranked node without charging phantom capacity. ``exclude`` ((N,)
-    or (P, N) bool) hard-masks engine-forbidden nodes (ASLEEP capacity;
-    per-pod deadline-late WAKING nodes) out of the scoring validity."""
-    blocked = [block.get(p.uid) for p in pods] if block else None
-    assignments, diag = sched.select_many(pods, nodes, now=t,
-                                          blocked=blocked, exclude=exclude)
-    still: list[Pod] = []
-    for pod, idx in zip(pods, assignments):
-        if idx is None:
-            still.append(pod)
-            continue
-        _commit(pod, idx, nodes, t, diag["per_pod_time_s"], records, running,
-                timeline, arrival_s=(arrive or {}).get(pod.uid, 0.0),
-                efleet=efleet)
-    return still
+from repro.cluster.workload import ArrivalProcess, PaperArrivals
 
 
 def run_scenario(arrivals: ArrivalProcess, scheme: str,
@@ -300,306 +50,32 @@ def run_scenario(arrivals: ArrivalProcess, scheme: str,
                  batch_backend: str = "jax",
                  carbon: CarbonPolicy | None = None,
                  autoscale: AutoscalePolicy | None = None) -> SimResult:
-    """Drive one scenario through the event-driven engine.
+    """Drive one scenario through the event-driven kernel.
 
     Events are pod-arrival bursts (from ``arrivals``) and task completions
-    (from prior placements). Each scheduling round walks the FIFO pending
-    queue against current cluster state: default-scheduler pods and
+    (from prior placements); each scheduling round walks the FIFO pending
+    queue against current cluster state. Default-scheduler pods and
     per-pod TOPSIS go through ``select``; with ``batch=True`` the round's
     TOPSIS pods are scored in one ``BatchScheduler.select_many`` pass on
-    ``batch_backend`` (the fleet-scale path — bursts route through the
-    batched engine). After a round, the clock advances to the earliest of
-    the next completion (releasing exactly one pod's resources before
-    retrying, the legacy backoff step) or the next arrival burst. Pods
-    still pending when no completion or arrival can ever free capacity are
-    counted unschedulable.
+    ``batch_backend`` (the fleet-scale path).
 
-    With a ``carbon`` policy the engine additionally (1) attaches the
-    policy's signal to the TOPSIS schedulers (sixth carbon-rate criterion)
-    and to the run's power timeline (carbon accounting); (2) *defers*
-    deferrable pods while the fleet-minimum intensity exceeds
-    ``carbon.defer_threshold`` — bounded by each pod's deadline — waking at
-    ``carbon.check_interval_s`` cadence and exactly at deadlines; and (3)
-    *preempts* a running deferrable task (at most once per pod, never past
-    its deadline) when its node's regional intensity exceeds
-    ``carbon.preempt_threshold``, truncating its timeline segment and
-    requeueing it as pending. Deferred pods are never counted
-    unschedulable while a wake event is still due.
-
-    With an ``autoscale`` policy (``repro.core.elastic``) nodes get a
-    power-state lifecycle: (1) every round excludes ASLEEP nodes and feeds
-    real power states into the awake/marginal-idle criterion (an IDLE node
-    is awake — zero marginal idle cost); (2) pods still pending after a
-    round wake the TOPSIS-best sleeping nodes (a pod committed to a node
-    that is still WAKING starts exactly at the wake-completion instant,
-    and a deferrable pod is never committed to a WAKING node whose ready
-    time lies past its deadline); (3) at ``consolidate_interval_s``
-    cadence, low-utilization nodes are drained — every running task
-    evicted, truncated, and requeued through the preemption machinery,
-    only when it provably fits on the remaining awake fleet and never when
-    a deferrable victim is at/past its deadline — and put straight to
-    sleep. The fleet's IDLE/ASLEEP/WAKING draw and wake surges land on the
-    timeline's state ledger (``SimResult.fleet_idle_energy_kj`` /
-    ``fleet_carbon_g``). ``autoscale=None`` reproduces the policy-free
-    engine bitwise.
+    ``carbon`` (a :class:`~repro.core.carbon.CarbonPolicy`) attaches the
+    signal to the TOPSIS schedulers (sixth carbon-rate criterion) and the
+    power timeline, and enables deferral/preemption temporal shifting;
+    ``autoscale`` (an :class:`~repro.core.elastic.AutoscalePolicy`) gives
+    nodes the sleep/wake/drain lifecycle. Both are plain knob dataclasses;
+    each maps onto one ``SchedulingPolicy`` implementation, composed in
+    the fixed order ``[carbon, autoscale]``. With both at ``None`` the
+    kernel runs policy-free and reproduces the legacy engine bitwise.
     """
-    nodes = cluster_factory()
-    csig = carbon.signal if carbon is not None else None
-    sched = {"topsis": (BatchScheduler(scheme, adaptive=adaptive,
-                                       backend=batch_backend,
-                                       carbon_signal=csig) if batch
-                        else GreenPodScheduler(scheme, adaptive=adaptive,
-                                               carbon_signal=csig)),
-             "default": DefaultK8sScheduler()}
-    events = sorted(arrivals.events(), key=lambda ev: ev[0])
-    ei = 0
-    pending: list[Pod] = []
-    # running heap entries: (end_t, uid, pod, node_i, record_i, segment_i)
-    running: list[tuple] = []
-    records: list[PodRecord] = []
-    timeline = PowerTimeline(
-        carbon_signal=csig,
-        node_region={n.name: n.region for n in nodes} if carbon else None)
-    fleet_regions = sorted({n.region for n in nodes})
-    arrive: dict[int, float] = {}      # uid -> burst arrival time
-    preempted: set[int] = set()        # uids evicted once already
-    evict_block: dict[int, tuple[int, float]] = {}   # uid -> (node_i, t_evict)
-    n_preempt = 0
-    n_migrations = 0
-    efleet = (ElasticFleet(nodes, autoscale, timeline)
-              if autoscale is not None else None)
-    next_consolidate = (autoscale.consolidate_interval_s
-                        if autoscale is not None
-                        and autoscale.consolidate_interval_s is not None
-                        else None)
-    t = 0.0
-    unschedulable = 0
-
-    def _deadline(pod: Pod) -> float:
-        return arrive.get(pod.uid, 0.0) + pod.deadline_s
-
-    while True:
-        # ingest every burst due by the current clock
-        while ei < len(events) and events[ei][0] <= t:
-            for p in events[ei][1]:
-                if carbon is not None and p.deferrable and not (
-                        math.isfinite(p.deadline_s) and p.deadline_s > 0.0):
-                    # an unbounded deadline would let the wake loop spin
-                    # forever under a never-dipping signal
-                    raise ValueError(
-                        f"deferrable pod {p.uid} needs a finite positive "
-                        f"deadline_s, got {p.deadline_s}")
-                arrive.setdefault(p.uid, events[ei][0])
-            pending.extend(events[ei][1])
-            ei += 1
-        # safety net: release anything that finished before now (the advance
-        # step below never moves the clock past an unreleased completion)
-        while running and running[0][0] < t:
-            _pop_release(running, nodes, efleet)
-        if not pending and not running and ei >= len(events):
-            break
-        # elastic bookkeeping: finalize wake transitions completed by now
-        # (their WAKING intervals land in the state ledger; the nodes turn
-        # ACTIVE or IDLE before this round queries states)
-        if efleet is not None:
-            efleet.advance_to(t)
-        # preemption event: evict running deferrable tasks whose node's
-        # regional intensity spiked above the threshold (once per pod,
-        # never past its deadline); truncate their ledger entries at t and
-        # requeue them — they re-enter this round's pending queue and
-        # either migrate to a cleaner region or defer for a dip. A victim
-        # is blocked from the node it was evicted off for as long as the
-        # clock stays at the eviction instant — an instant same-node
-        # restart would discard the partial run for nothing, and rounds
-        # can repeat at one t via the backoff step — and may return there
-        # once time advances.
-        if carbon is not None and carbon.preempt_threshold is not None:
-            victims = [e for e in running
-                       if e[0] > t and e[2].deferrable
-                       and e[2].uid not in preempted and t < _deadline(e[2])
-                       and carbon.signal.intensity(nodes[e[3]].region, t)
-                       > carbon.preempt_threshold]
-            if victims:
-                pending.extend(_evict(victims, t, running, nodes, records,
-                                      timeline, efleet))
-                for _, uid, _, idx, _, _ in victims:
-                    preempted.add(uid)
-                    evict_block[uid] = (idx, t)
-                n_preempt += len(victims)
-        # consolidation drain event (elastic fleet): at the policy cadence,
-        # evict + requeue every task of the low-utilization nodes the
-        # policy picked (each provably fits on the remaining awake fleet;
-        # deferrable victims are never drained at/past their deadline) and
-        # put the emptied nodes straight to sleep. Requeued pods re-enter
-        # this round's pending queue and re-place through the normal TOPSIS
-        # round; the drained node is ASLEEP, so the exclusion mask keeps
-        # them from bouncing straight back.
-        if (efleet is not None and next_consolidate is not None
-                and t >= next_consolidate):
-            if running:
-                drain_idxs, victims = efleet.consolidation_victims(
-                    t, running, _deadline)
-                if victims:
-                    # drained pods go to the FRONT of the queue: they are
-                    # older than any pod arriving this round, and restart
-                    # priority is what keeps the drain-time fit guarantee
-                    # (and deferrable victims' deadlines) honest against
-                    # same-round arrival contention
-                    pending[:0] = _evict(victims, t, running, nodes,
-                                         records, timeline, efleet)
-                    n_migrations += len(victims)
-                    for i in drain_idxs:
-                        efleet.force_sleep(i, t)
-            next_consolidate = t + autoscale.consolidate_interval_s
-        blocked_now = {uid: idx for uid, (idx, tt) in evict_block.items()
-                       if tt == t}
-        # exclusion masks for this round: ASLEEP nodes for everyone, plus —
-        # per deferrable pod — WAKING nodes whose ready time lies past the
-        # pod's deadline (it would start there, violating the deferral
-        # contract). Also refresh the power-state column the awake
-        # criterion reads.
-        base_ex = None
-        if efleet is not None:
-            efleet.write_states(t)
-            base_ex = efleet.exclude_mask(t)
-
-        def _exclude_for(pod: Pod):
-            if base_ex is None:
-                return None
-            if pod.deferrable and math.isfinite(pod.deadline_s):
-                return efleet.exclude_for_deadline(base_ex, _deadline(pod))
-            return base_ex
-        # scheduling round: place what fits, FIFO retry for the rest;
-        # deferrable pods sit out while the fleet-wide carbon dip test
-        # fails and their deadline is still ahead
-        defer_now = False
-        if carbon is not None and any(p.deferrable for p in pending):
-            defer_now = (carbon.signal.fleet_min(fleet_regions, t)
-                         > carbon.defer_threshold)
-        deferred: list[Pod] = []
-        placed: set[int] = set()
-        burst: list[Pod] = []
-        for pod in pending:
-            if defer_now and pod.deferrable and t < _deadline(pod) - 1e-12:
-                deferred.append(pod)
-                continue
-            if batch and pod.scheduler == "topsis":
-                burst.append(pod)
-                continue
-            idx, diag = sched[pod.scheduler].select(pod, nodes, now=t,
-                                                    exclude=_exclude_for(pod))
-            if idx is None:
-                continue
-            if blocked_now.get(pod.uid) == idx:
-                deferred.append(pod)      # blocked instant same-node restart
-                continue
-            _commit(pod, idx, nodes, t, diag["scheduling_time_s"], records,
-                    running, timeline, arrival_s=arrive.get(pod.uid, 0.0),
-                    efleet=efleet)
-            placed.add(pod.uid)
-        if burst:
-            ex_b = None
-            if base_ex is not None:
-                per_pod = [_exclude_for(p) for p in burst]
-                ex_b = (np.stack(per_pod)
-                        if any(pp is not base_ex for pp in per_pod)
-                        else base_ex)
-            b_still = run_burst(burst, nodes, sched["topsis"], t,
-                                records, running, timeline, arrive,
-                                block=blocked_now, exclude=ex_b,
-                                efleet=efleet)
-            placed.update({p.uid for p in burst} - {p.uid for p in b_still})
-        pending = [p for p in pending if p.uid not in placed]
-        # evicted-but-unplaced victims wait like deferred pods (guarantees
-        # a wake event so they retry; the block lapses once t advances)
-        in_deferred = {p.uid for p in deferred}
-        deferred.extend(p for p in pending
-                        if p.uid in blocked_now and p.uid not in in_deferred)
-        # queue-pressure wake (elastic fleet): pods that ended this round
-        # unplaced — and are not voluntarily deferring — wake the
-        # TOPSIS-best sleeping nodes; the wake-completion event re-runs the
-        # round, where the pods can commit onto the WAKING capacity
-        if efleet is not None and pending:
-            in_deferred_now = {p.uid for p in deferred}
-            pressure = [p for p in pending if p.uid not in in_deferred_now]
-            if pressure:
-                efleet.wake_for_pressure(sched["topsis"], pressure, t)
-        # advance the clock to the next event: completion, arrival burst,
-        # or carbon-check wake (while pods defer or preemptable tasks run)
-        next_arrival = events[ei][0] if ei < len(events) else None
-        next_completion = running[0][0] if running else None
-        next_wake = None
-        if carbon is not None:
-            cands = [_deadline(p) for p in deferred]
-            if deferred:
-                cands.append(t + carbon.check_interval_s)
-            if carbon.preempt_threshold is not None and any(
-                    e[0] > t and e[2].deferrable and e[1] not in preempted
-                    and t < _deadline(e[2]) for e in running):
-                cands.append(t + carbon.check_interval_s)
-            cands = [c for c in cands if c > t]
-            if cands:
-                next_wake = min(cands)
-        # elastic wake-like events: in-flight node wake completions (the
-        # pending pods retry onto the now-awake capacity) and the next
-        # consolidation tick (only while tasks run — a drained fleet has
-        # nothing to consolidate, and an unconditional tick would keep the
-        # loop alive forever)
-        if efleet is not None:
-            ecands = []
-            nt = efleet.next_transition(t)
-            if nt is not None:
-                ecands.append(nt)
-            if next_consolidate is not None and running \
-                    and next_consolidate > t:
-                ecands.append(next_consolidate)
-            if ecands:
-                ne = min(ecands)
-                next_wake = ne if next_wake is None else min(next_wake, ne)
-        if pending and next_completion is not None \
-                and (next_arrival is None or next_completion <= next_arrival) \
-                and (next_wake is None or next_completion <= next_wake):
-            # backoff step: free exactly one completed pod, then retry
-            t = _pop_release(running, nodes, efleet)
-            continue
-        if next_arrival is not None and (next_wake is None
-                                         or next_arrival <= next_wake):
-            if next_completion is not None and next_completion <= next_arrival:
-                # release completions due at-or-before the arrival (one per
-                # iteration) so the burst schedules against freed capacity —
-                # including the exact completion==arrival tie
-                t = _pop_release(running, nodes, efleet)
-                continue
-            t = next_arrival
-            continue
-        if next_wake is not None:
-            if next_completion is not None and next_completion <= next_wake:
-                t = _pop_release(running, nodes, efleet)
-                continue
-            t = next_wake
-            continue
-        if pending:
-            # no completions left, no future arrivals: nothing can ever fit
-            unschedulable += len(pending)
-            break
-        break   # only running tasks remain; their records are complete
-    if efleet is not None:
-        # close the power-state ledger at the run horizon (latest task end
-        # or the final clock, whichever is later): drain the still-running
-        # completions through the elastic hooks so every node's
-        # post-last-task idle tail (and the ASLEEP stretch it lazily decays
-        # into) lands in the timeline, then flush the open intervals —
-        # state energy/carbon totals are exact
-        horizon = t
-        for r in records:
-            horizon = max(horizon, r.start_s + r.runtime_s)
-        while running:
-            _pop_release(running, nodes, efleet)
-        efleet.close(horizon)
-    return SimResult(records, unschedulable, timeline, preemptions=n_preempt,
-                     migrations=n_migrations,
-                     wakes=efleet.wakes if efleet is not None else 0,
-                     sleeps=efleet.sleeps if efleet is not None else 0)
+    policies = []
+    if carbon is not None:
+        policies.append(CarbonScheduling(carbon))
+    if autoscale is not None:
+        policies.append(AutoscaleScheduling(autoscale))
+    return simulate(arrivals, scheme, cluster_factory=cluster_factory,
+                    adaptive=adaptive, batch=batch,
+                    batch_backend=batch_backend, policies=policies)
 
 
 def run_experiment(level: str, scheme: str,
@@ -608,7 +84,7 @@ def run_experiment(level: str, scheme: str,
                    batch_backend: str = "jax") -> SimResult:
     """One cell of the paper's factorial design (competition level x scheme):
     the paper-mode arrival process (all pods at t=0, interleaved Table-V
-    stream) through the event-driven engine."""
+    stream) through the event-driven kernel."""
     return run_scenario(PaperArrivals(level), scheme,
                         cluster_factory=cluster_factory, adaptive=adaptive,
                         batch=batch, batch_backend=batch_backend)

@@ -38,6 +38,8 @@ from typing import Sequence
 
 import numpy as np
 
+from repro.core.policy import CARBON_CHECK, Event, SchedulingPolicy
+
 J_PER_KWH = 3.6e6
 
 # Default fleet regions: synthetic fleets spread nodes round-robin across
@@ -285,3 +287,92 @@ class CarbonPolicy:
                 self.preempt_threshold >= 0.0):
             raise ValueError(f"preempt_threshold must be >= 0, "
                              f"got {self.preempt_threshold}")
+
+
+class CarbonScheduling(SchedulingPolicy):
+    """Carbon temporal shifting as a kernel policy: the engine-side logic
+    of :class:`CarbonPolicy`, expressed through the
+    :class:`~repro.core.policy.SchedulingPolicy` hook protocol.
+
+    * ``on_arrival``     — rejects deferrable pods without a finite
+      positive deadline (an unbounded deadline would let the wake loop
+      spin forever under a never-dipping signal).
+    * ``on_round_start`` — the *preemption* event: running deferrable
+      tasks whose node's regional intensity spiked above
+      ``preempt_threshold`` are evicted (at most once per pod, never past
+      their deadline), their ledger entries truncated at ``t``, and the
+      pods requeued with a same-node restart block for the instant.
+    * ``filter_pending`` — the *deferral* event: while the fleet-minimum
+      intensity exceeds ``defer_threshold``, deferrable pods sit the
+      round out, bounded by their deadline.
+    * ``next_wake_time`` — CARBON_CHECK events at the policy cadence
+      while pods defer or preemptable tasks run, and exactly at every
+      held pod's deadline (a deferred pod never starts past it).
+
+    One instance drives one run (it accumulates the once-per-pod
+    preemption set); ``run_scenario`` constructs a fresh one per call.
+    """
+
+    def __init__(self, policy: CarbonPolicy):
+        self.policy = policy
+        self.preempted: set[int] = set()   # uids evicted once already
+        self.fleet_regions: list[str] = []
+
+    @property
+    def carbon_signal(self) -> CarbonSignal:
+        return self.policy.signal
+
+    def bind(self, sim) -> None:
+        self.fleet_regions = sorted({n.region for n in sim.state.nodes})
+
+    def on_arrival(self, sim, pod, t: float) -> None:
+        if pod.deferrable and not (math.isfinite(pod.deadline_s)
+                                   and pod.deadline_s > 0.0):
+            raise ValueError(
+                f"deferrable pod {pod.uid} needs a finite positive "
+                f"deadline_s, got {pod.deadline_s}")
+
+    def _preemptable(self, sim, task, t: float) -> bool:
+        """Still-running deferrable task, not yet preempted, deadline
+        ahead — the class the preemption spike test applies to."""
+        return (task.end_s > t and task.pod.deferrable
+                and task.pod.uid not in self.preempted
+                and t < sim.deadline(task.pod))
+
+    def on_round_start(self, sim, t: float) -> None:
+        pol = self.policy
+        if pol.preempt_threshold is None:
+            return
+        st = sim.state
+        victims = [task for task in st.running
+                   if self._preemptable(sim, task, t)
+                   and pol.signal.intensity(st.nodes[task.node_index].region,
+                                            t) > pol.preempt_threshold]
+        if not victims:
+            return
+        st.pending.extend(sim.evict(victims, t))
+        for task in victims:
+            self.preempted.add(task.uid)
+            sim.block_restart(task.uid, task.node_index, t)
+        st.preemptions += len(victims)
+
+    def filter_pending(self, sim, pods, t: float):
+        pol = self.policy
+        if not any(p.deferrable for p in pods):
+            return []
+        if pol.signal.fleet_min(self.fleet_regions, t) <= pol.defer_threshold:
+            return []
+        return [p for p in pods
+                if p.deferrable and t < sim.deadline(p) - 1e-12]
+
+    def next_wake_time(self, sim, t: float, held) -> Event | None:
+        pol = self.policy
+        cands = [sim.deadline(p) for p in held]
+        if held:
+            cands.append(t + pol.check_interval_s)
+        if pol.preempt_threshold is not None and any(
+                self._preemptable(sim, task, t)
+                for task in sim.state.running):
+            cands.append(t + pol.check_interval_s)
+        cands = [c for c in cands if c > t]
+        return Event.make(min(cands), CARBON_CHECK) if cands else None

@@ -55,6 +55,8 @@ from typing import Callable, Sequence
 import numpy as np
 
 from repro.core.energy import NODE_ENERGY_PROFILES
+from repro.core.policy import (CONSOLIDATE_TICK, WAKE_DONE, Event,
+                               SchedulingPolicy)
 
 # Canonical power-state names (NodeTable carries them as a column; the
 # ``awake`` criterion derives from them when set).
@@ -376,9 +378,9 @@ class ElasticFleet:
                          self.nodes[idx].free_mem - pod.mem]
         return woken
 
-    def consolidation_victims(self, t: float, running: Sequence[tuple],
+    def consolidation_victims(self, t: float, running: Sequence,
                               deadline_of: Callable) -> tuple[list[int],
-                                                              list[tuple]]:
+                                                              list]:
         """Pick this pass's drain targets: awake ACTIVE nodes (index ≥
         ``min_awake``) with cpu utilization below the policy threshold,
         lowest first. A node is drained only if (a) the awake floor
@@ -398,12 +400,13 @@ class ElasticFleet:
         every other victim of the pass landed on that same node first.
         Non-deferrable victims keep the first-fit proof — in the rare
         packing divergence they retry like any pending pod (worst case a
-        pressure wake recovers the capacity). Returns (drained node
-        indices, victim running-heap entries)."""
+        pressure wake recovers the capacity). ``running`` holds the
+        kernel's ``RunningTask`` entries; returns (drained node indices,
+        victim entries)."""
         sts = self.states(t)
-        by_node: dict[int, list[tuple]] = {}
+        by_node: dict[int, list] = {}
         for e in running:
-            by_node.setdefault(e[3], []).append(e)
+            by_node.setdefault(e.node_index, []).append(e)
         cands = sorted(
             (i for i in by_node
              if sts[i] == ACTIVE and i >= self.policy.min_awake
@@ -418,17 +421,18 @@ class ElasticFleet:
                 if s in (ACTIVE, IDLE) and i not in set(cands)}
         ledger = {i: list(cap) for i, cap in base.items()}
         drained: list[int] = []
-        victims: list[tuple] = []
+        victims: list = []
         for i in cands:
             if n_awake - len(drained) <= self.policy.min_awake:
                 break
             vs = by_node[i]
-            if any(e[2].deferrable and not t < deadline_of(e[2]) for e in vs):
+            if any(e.pod.deferrable and not t < deadline_of(e.pod)
+                   for e in vs):
                 continue
             trial = {j: list(cap) for j, cap in ledger.items()}
             ok = True
             for e in vs:
-                pod = e[2]
+                pod = e.pod
                 fit = next((cap for cap in trial.values()
                             if cap[0] >= pod.cpu - 1e-9
                             and cap[1] >= pod.mem - 1e-9), None)
@@ -449,16 +453,119 @@ class ElasticFleet:
         # victims miss that bar are dropped from the pass; shrinking the
         # victim set only loosens the test, so this converges.
         while victims:
-            tot_cpu = sum(e[2].cpu for e in victims)
-            tot_mem = sum(e[2].mem for e in victims)
-            bad = {e[3] for e in victims
-                   if e[2].deferrable and math.isfinite(deadline_of(e[2]))
+            tot_cpu = sum(e.pod.cpu for e in victims)
+            tot_mem = sum(e.pod.mem for e in victims)
+            bad = {e.node_index for e in victims
+                   if e.pod.deferrable and math.isfinite(deadline_of(e.pod))
                    and not any(
-                       c - (tot_cpu - e[2].cpu) >= e[2].cpu - 1e-9
-                       and m - (tot_mem - e[2].mem) >= e[2].mem - 1e-9
+                       c - (tot_cpu - e.pod.cpu) >= e.pod.cpu - 1e-9
+                       and m - (tot_mem - e.pod.mem) >= e.pod.mem - 1e-9
                        for c, m in base.values())}
             if not bad:
                 break
             drained = [i for i in drained if i not in bad]
-            victims = [e for e in victims if e[3] not in bad]
+            victims = [e for e in victims if e.node_index not in bad]
         return drained, victims
+
+
+class AutoscaleScheduling(SchedulingPolicy):
+    """The elastic fleet lifecycle as a kernel policy: the engine-side
+    logic of :class:`AutoscalePolicy`, expressed through the
+    :class:`~repro.core.policy.SchedulingPolicy` hook protocol around an
+    :class:`ElasticFleet` state machine.
+
+    * ``on_clock``       — finalize wake transitions completed by ``t``
+      (their WAKING intervals land in the state ledger before the round
+      queries node states).
+    * ``on_round_start`` — the *drain* event: at the consolidation
+      cadence, low-utilization nodes' tasks are evicted through the
+      kernel's truncate-and-requeue machinery (victims go to the *front*
+      of the pending queue) and the emptied nodes sleep immediately.
+    * ``exclude_mask`` / ``exclude_for`` — ASLEEP nodes are masked out of
+      every pod's scoring validity; WAKING nodes whose ready time lies
+      past a deferrable pod's deadline are masked for that pod.
+    * ``on_commit``      — a pod bound to a still-WAKING node starts
+      exactly at the wake-completion instant.
+    * ``on_round_end``   — the *wake* event: pods that ended the round
+      unplaced (and are not voluntarily deferring) wake the TOPSIS-best
+      sleeping nodes.
+    * ``next_wake_time`` — WAKE_DONE at in-flight wake completions;
+      CONSOLIDATE_TICK at the drain cadence while tasks run.
+
+    One instance drives one run (the fleet state machine is per-run);
+    ``run_scenario`` constructs a fresh one per call.
+    """
+
+    def __init__(self, policy: AutoscalePolicy):
+        self.policy = policy
+        self.fleet: ElasticFleet | None = None
+        self.next_consolidate = policy.consolidate_interval_s
+
+    def bind(self, sim) -> None:
+        self.fleet = ElasticFleet(sim.state.nodes, self.policy,
+                                  sim.state.timeline)
+
+    def on_clock(self, sim, t: float) -> None:
+        self.fleet.advance_to(t)
+
+    def on_round_start(self, sim, t: float) -> None:
+        if self.next_consolidate is None or t < self.next_consolidate:
+            return
+        st = sim.state
+        if st.running:
+            drain_idxs, victims = self.fleet.consolidation_victims(
+                t, st.running, sim.deadline)
+            if victims:
+                # drained pods go to the FRONT of the queue: they are
+                # older than any pod arriving this round, and restart
+                # priority is what keeps the drain-time fit guarantee
+                # (and deferrable victims' deadlines) honest against
+                # same-round arrival contention
+                st.pending[:0] = sim.evict(victims, t)
+                st.migrations += len(victims)
+                for i in drain_idxs:
+                    self.fleet.force_sleep(i, t)
+        self.next_consolidate = t + self.policy.consolidate_interval_s
+
+    def exclude_mask(self, sim, t: float) -> np.ndarray:
+        self.fleet.write_states(t)
+        return self.fleet.exclude_mask(t)
+
+    def exclude_for(self, sim, pod, base: np.ndarray,
+                    t: float) -> np.ndarray | None:
+        if pod.deferrable and math.isfinite(pod.deadline_s):
+            return self.fleet.exclude_for_deadline(base, sim.deadline(pod))
+        return None
+
+    def on_commit(self, sim, node_index: int, t: float) -> float:
+        return self.fleet.on_commit(node_index, t)
+
+    def on_completion(self, sim, node_index: int, end_t: float) -> None:
+        self.fleet.on_complete(node_index, end_t)
+
+    def on_evict(self, sim, node_index: int, t: float) -> None:
+        self.fleet.on_evict(node_index, t)
+
+    def on_round_end(self, sim, unplaced, held, t: float) -> None:
+        if not unplaced:
+            return
+        held_uids = {p.uid for p in held}
+        pressure = [p for p in unplaced if p.uid not in held_uids]
+        if pressure:
+            self.fleet.wake_for_pressure(sim.state.schedulers["topsis"],
+                                         pressure, t)
+
+    def next_wake_time(self, sim, t: float, held) -> Event | None:
+        cands: list[Event] = []
+        ready = self.fleet.next_transition(t)
+        if ready is not None:
+            cands.append(Event.make(ready, WAKE_DONE))
+        if (self.next_consolidate is not None and sim.state.running
+                and self.next_consolidate > t):
+            cands.append(Event.make(self.next_consolidate, CONSOLIDATE_TICK))
+        return min(cands) if cands else None
+
+    def finalize(self, sim, horizon: float) -> None:
+        self.fleet.close(horizon)
+        sim.state.wakes = self.fleet.wakes
+        sim.state.sleeps = self.fleet.sleeps

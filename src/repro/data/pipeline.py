@@ -30,7 +30,6 @@ class SyntheticLM:
                  ) -> np.ndarray:
         """Rows [lo, hi) of the global batch for `step` (shard-local gen)."""
         hi = self.global_batch if hi is None else hi
-        rng = np.random.default_rng((self.seed, step))
         # generate the full batch index stream cheaply but slice locally:
         # rows are independent streams keyed by (seed, step, row)
         out = np.empty((hi - lo, self.seq_len), np.int32)

@@ -36,7 +36,6 @@ Used by launch/dryrun.py for EXPERIMENTS.md §Roofline and by the §Perf loop
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Any
 

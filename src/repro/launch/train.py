@@ -14,11 +14,10 @@ import argparse
 import os
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import registry
-from repro.data.pipeline import Prefetcher, SyntheticLM, make_global_batch
+from repro.data.pipeline import SyntheticLM, make_global_batch
 from repro.launch.mesh import make_host_mesh
 from repro.models import lm
 from repro.optim import adamw

@@ -6,7 +6,6 @@ accumulation via preferred_element_type.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any
 
 import jax

@@ -29,9 +29,8 @@ import jax.numpy as jnp
 
 from repro.models import mamba2, moe, rwkv6
 from repro.models.config import ModelConfig
-from repro.models.layers import (apply_rope, attention, attn_init, dense_init,
-                                 dot, ffn, ffn_init, mla_attention, mla_init,
-                                 rmsnorm)
+from repro.models.layers import (attention, attn_init, dense_init, ffn,
+                                 ffn_init, mla_attention, mla_init, rmsnorm)
 
 Params = dict[str, Any]
 

@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
-from repro.models.layers import Params, dense_init, dot, ffn, ffn_init
+from repro.models.layers import Params, dense_init, ffn, ffn_init
 
 
 def moe_init(key, cfg: ModelConfig) -> Params:

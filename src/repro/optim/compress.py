@@ -11,7 +11,6 @@ make_compressed_dp_step and tests/test_compression.py).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

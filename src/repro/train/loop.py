@@ -5,8 +5,6 @@ path with int8 error-feedback gradient compression.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -163,7 +161,6 @@ def make_compressed_dp_step(model: LM, opt_cfg: adamw.AdamWConfig,
         return new_params, new_state, new_err, dict(m, loss=loss)
 
     rep = P()
-    pspec = jax.tree.map(lambda _: rep, None) if False else rep
     from jax.experimental.shard_map import shard_map
     smapped = shard_map(
         local_step, mesh=mesh,

@@ -1,0 +1,62 @@
+"""The recorded golden scenario, in one place.
+
+tests/golden_engine_scenarios.json pins the kernel refactor bitwise
+against the pre-refactor engine; this module is the single source of the
+scenario it was recorded under — the signal/policy constructors, the
+arrival process, the fleet, and the policy matrix. Both the recorder
+(scripts/record_engine_golden.py) and the pin (tests/test_engine.py)
+import it, so the two can never drift apart silently. If the engine's
+behaviour is changed *intentionally*, re-record the golden with the
+script and say so in the PR.
+"""
+from repro.core.carbon import CarbonPolicy, diurnal_fleet_signal
+from repro.core.elastic import AutoscalePolicy
+from repro.cluster.node import make_scenario_cluster
+from repro.cluster.simulator import run_scenario
+from repro.cluster.workload import PoissonArrivals
+
+PERIOD_S = 1800.0
+
+# scenario name -> which policies are attached and whether the arrival
+# stream carries deferrable pods
+SCENARIOS = {
+    "policy_free": dict(carbon=False, autoscale=False, deferrable=False),
+    "carbon_only": dict(carbon=True, autoscale=False, deferrable=True),
+    "autoscale_only": dict(carbon=False, autoscale=True, deferrable=False),
+    "carbon_autoscale": dict(carbon=True, autoscale=True, deferrable=True),
+}
+
+
+def make_carbon() -> CarbonPolicy:
+    sig = diurnal_fleet_signal(base=300.0, amplitude=200.0,
+                               period_s=PERIOD_S, phase_s=PERIOD_S / 4.0,
+                               stagger_s=PERIOD_S / 16.0)
+    return CarbonPolicy(sig, defer_threshold=300.0, preempt_threshold=450.0,
+                        check_interval_s=30.0)
+
+
+def make_autoscale() -> AutoscalePolicy:
+    return AutoscalePolicy(idle_timeout_s=20.0, min_awake=1,
+                           consolidate_interval_s=60.0,
+                           consolidate_util_below=0.3)
+
+
+def arrivals(deferrable: bool, seed: int = 7) -> PoissonArrivals:
+    return PoissonArrivals(rate_per_s=0.3, n_bursts=3, burst_size=4,
+                           seed=seed,
+                           deferrable_share=0.5 if deferrable else 0.0,
+                           deadline_s=300.0)
+
+
+def fleet(seed: int = 3):
+    return lambda: make_scenario_cluster("mixed", 8, seed=seed)
+
+
+def run_cell(name: str, backend: str):
+    """One golden cell: the named policy combination on one backend."""
+    spec = SCENARIOS[name]
+    return run_scenario(
+        arrivals(spec["deferrable"]), "energy_centric",
+        cluster_factory=fleet(), batch=True, batch_backend=backend,
+        carbon=make_carbon() if spec["carbon"] else None,
+        autoscale=make_autoscale() if spec["autoscale"] else None)

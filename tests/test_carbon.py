@@ -39,7 +39,6 @@ except ModuleNotFoundError:
 
     st = _AnyStrategy()
 
-from repro.core import topsis
 from repro.core.carbon import (CarbonPolicy, ConstantCarbon, SinusoidalCarbon,
                                TraceCarbon, J_PER_KWH, carbon_grams,
                                diurnal_fleet_signal)

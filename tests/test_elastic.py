@@ -46,6 +46,7 @@ from repro.core.elastic import (ACTIVE, ASLEEP, IDLE, WAKING,
 from repro.core.energy import NODE_ENERGY_PROFILES, PowerTimeline
 from repro.core.scheduler import (BatchScheduler, DefaultK8sScheduler,
                                   GreenPodScheduler)
+from repro.cluster.engine import RunningTask
 from repro.cluster.node import Node, NodeTable, make_scenario_cluster
 from repro.cluster.simulator import run_scenario, table6
 from repro.cluster.workload import (WORKLOADS, Pod, PoissonArrivals,
@@ -364,8 +365,8 @@ def test_multi_victim_drain_requires_order_independent_fit_for_deferrable():
         for pod in (med, comp):
             fleet.on_commit(2, 0.0)
             nodes[2].bind(pod.cpu, pod.mem)
-        running = [(50.0, med.uid, med, 2, 0, 0),
-                   (60.0, comp.uid, comp, 2, 1, 1)]
+        running = [RunningTask(50.0, med.uid, med, 2, 0, 0),
+                   RunningTask(60.0, comp.uid, comp, 2, 1, 1)]
         return fleet.consolidation_victims(5.0, running,
                                            lambda p: p.deadline_s)
     # roomy y: the deferrable victim fits y even after the complex victim

@@ -1,0 +1,215 @@
+"""Discrete-event simulation kernel: typed events, the golden policy
+matrix, event-log determinism, and policy-composition properties.
+
+The refactor contract: the kernel (``repro.cluster.engine``) composed with
+``CarbonScheduling`` / ``AutoscaleScheduling`` must reproduce the
+pre-kernel engine's outputs *bitwise* for every policy combination
+(policy-free, carbon-only, autoscale-only, carbon+autoscale) on every
+backend — pinned against tests/golden_engine_scenarios.json, which was
+recorded on the pre-refactor engine (scripts/record_engine_golden.py).
+"""
+import json
+import os
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    def settings(*args, **kwargs):
+        def wrap(f):
+            return f
+        return wrap
+
+    def given(*args, **kwargs):
+        def wrap(f):
+            def skipped():
+                pytest.skip("hypothesis not installed "
+                            "(pip install -r requirements-dev.txt)")
+            skipped.__name__ = f.__name__
+            skipped.__doc__ = f.__doc__
+            return skipped
+        return wrap
+
+    class _AnyStrategy:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+from engine_golden_spec import (SCENARIOS, arrivals, fleet, make_autoscale,
+                                make_carbon, run_cell)
+from repro.core.carbon import CarbonScheduling
+from repro.core.elastic import AutoscaleScheduling
+from repro.core.policy import (ARRIVAL, CARBON_CHECK, COMPLETION,
+                               CONSOLIDATE_TICK, EVENT_KINDS, WAKE_DONE,
+                               Event, SchedulingPolicy)
+from repro.cluster.engine import RunningTask, simulate
+from repro.cluster.workload import WORKLOADS, Pod
+
+GOLDEN = json.load(open(os.path.join(os.path.dirname(__file__),
+                                     "golden_engine_scenarios.json")))
+
+
+# --- golden policy matrix: bitwise reproduction of the pre-kernel engine -----
+@pytest.mark.parametrize("backend", ["numpy", "jax", "pallas"])
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_golden_policy_matrix_bitwise(name, backend):
+    """Every (policy combination x backend) cell reproduces the recorded
+    pre-refactor output exactly: placements, start/runtimes, energy and
+    carbon totals, and every event counter."""
+    res = run_cell(name, backend)
+    g = GOLDEN["runs"][f"{name}/{backend}"]
+    assert [r.node for r in res.records] == g["nodes"]
+    assert [r.pod.uid for r in res.records] == g["uids"]
+    assert [r.start_s for r in res.records] == g["start_s"]
+    assert [r.runtime_s for r in res.records] == g["runtime_s"]
+    assert res.energy_kj("topsis") == g["energy_topsis_kj"]
+    assert res.energy_kj("default") == g["energy_default_kj"]
+    assert res.unschedulable == g["unschedulable"]
+    assert res.preemptions == g["preemptions"]
+    assert res.migrations == g["migrations"]
+    assert res.wakes == g["wakes"]
+    assert res.sleeps == g["sleeps"]
+    if SCENARIOS[name]["carbon"]:
+        assert res.total_carbon_g("topsis") == g["carbon_topsis_g"]
+        assert (res.mean_deferral_latency_s("topsis")
+                == g["mean_deferral_latency_s"])
+    if SCENARIOS[name]["autoscale"]:
+        assert res.fleet_idle_energy_kj() == g["fleet_idle_energy_kj"]
+        assert res.state_energy_kj() == g["state_energy_kj"]
+
+
+# --- typed events ------------------------------------------------------------
+def test_event_tie_break_order():
+    """At one instant: COMPLETION before ARRIVAL before wake-like — the
+    kernel's clock-advance precedence, encoded in Event ordering."""
+    c = Event.make(5.0, COMPLETION)
+    a = Event.make(5.0, ARRIVAL)
+    w = Event.make(5.0, CARBON_CHECK)
+    assert c < a < w
+    assert min([w, a, c]) is c
+    # time dominates priority
+    assert Event.make(4.0, WAKE_DONE) < c
+    assert Event.make(5.0, CONSOLIDATE_TICK) > a
+    # payload never participates in ordering
+    assert Event.make(1.0, COMPLETION, "x") == Event.make(1.0, COMPLETION, "y")
+
+
+def test_running_task_heap_order():
+    """RunningTask orders by (end_s, uid) exactly like the legacy bare
+    tuples — pods and indices never compare."""
+    p0 = Pod(0, WORKLOADS["light"], "topsis")
+    p1 = Pod(1, WORKLOADS["light"], "topsis")
+    a = RunningTask(10.0, 1, p1, 0, 0, 0)
+    b = RunningTask(10.0, 0, p0, 5, 9, 9)
+    c = RunningTask(9.0, 7, p1, 0, 0, 0)
+    assert sorted([a, b, c]) == [c, b, a]
+
+
+# --- event-log determinism ---------------------------------------------------
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_event_log_deterministic(name):
+    """A fixed scenario replays to the identical processed-event log —
+    same kinds, same instants, same payloads, in the same order."""
+    a = run_cell(name, "numpy")
+    b = run_cell(name, "numpy")
+    assert a.events is not None and len(a.events) > 0
+    assert a.events == b.events
+    assert {kind for _, kind, _ in a.events} <= set(EVENT_KINDS)
+    # every arrival burst and every completion shows up
+    n_arrivals = sum(1 for _, kind, _ in a.events if kind == ARRIVAL)
+    assert n_arrivals == 3                       # one per Poisson burst
+    completions = [payload for _, kind, payload in a.events
+                   if kind == COMPLETION]
+    assert set(completions) == {r.pod.uid for r in a.records}
+
+
+def test_event_log_policy_kinds_present():
+    """The carbon+autoscale cell exercises the policy event kinds: carbon
+    checks fire while pods defer, consolidation ticks while tasks run."""
+    res = run_cell("carbon_autoscale", "numpy")
+    kinds = {kind for _, kind, _ in res.events}
+    assert CARBON_CHECK in kinds
+    assert CONSOLIDATE_TICK in kinds
+
+
+# --- policy composition ------------------------------------------------------
+def _both_orders(seed_a: int, seed_f: int, backend: str = "numpy"):
+    out = []
+    for order in ((CarbonScheduling, AutoscaleScheduling),
+                  (AutoscaleScheduling, CarbonScheduling)):
+        policies = [cls(make_carbon()) if cls is CarbonScheduling
+                    else cls(make_autoscale()) for cls in order]
+        out.append(simulate(arrivals(True, seed=seed_a), "energy_centric",
+                            cluster_factory=fleet(seed_f), batch=True,
+                            batch_backend=backend, policies=policies))
+    return out
+
+
+def test_policy_order_invariant_on_recorded_scenario():
+    """[carbon, autoscale] and [autoscale, carbon] place the golden
+    scenario identically (and match the recorded golden)."""
+    ab, ba = _both_orders(7, 3)
+    g = GOLDEN["runs"]["carbon_autoscale/numpy"]
+    for res in (ab, ba):
+        assert [r.node for r in res.records] == g["nodes"]
+        assert [r.start_s for r in res.records] == g["start_s"]
+        assert res.energy_kj("topsis") == g["energy_topsis_kj"]
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed_a=st.integers(0, 2 ** 31 - 1), seed_f=st.integers(0, 100))
+def test_property_policy_composition_order_invariant(seed_a, seed_f):
+    """Property: composing [carbon, autoscale] vs [autoscale, carbon]
+    yields identical placements, starts, energies, and counters on
+    recorded Poisson scenarios."""
+    ab, ba = _both_orders(seed_a, seed_f)
+    assert [r.node for r in ab.records] == [r.node for r in ba.records]
+    assert ([r.start_s for r in ab.records]
+            == [r.start_s for r in ba.records])
+    for s in ("topsis", "default"):
+        assert ab.energy_kj(s) == ba.energy_kj(s)
+    assert ab.unschedulable == ba.unschedulable
+    assert (ab.preemptions, ab.migrations, ab.wakes, ab.sleeps) \
+        == (ba.preemptions, ba.migrations, ba.wakes, ba.sleeps)
+    assert ab.fleet_idle_energy_kj() == ba.fleet_idle_energy_kj()
+
+
+def test_noop_policy_is_bitwise_inert():
+    """A policy that overrides nothing composes with the kernel as a pure
+    no-op: same placements and energies as the policy-free run."""
+    ref = simulate(arrivals(False), "energy_centric",
+                   cluster_factory=fleet(), batch=True,
+                   batch_backend="numpy")
+    res = simulate(arrivals(False), "energy_centric",
+                   cluster_factory=fleet(), batch=True,
+                   batch_backend="numpy", policies=[SchedulingPolicy()])
+    assert [r.node for r in res.records] == [r.node for r in ref.records]
+    assert [r.start_s for r in res.records] == [r.start_s for r in ref.records]
+    for s in ("topsis", "default"):
+        assert res.energy_kj(s) == ref.energy_kj(s)
+    assert res.events == ref.events
+
+
+# --- SimResult.summary -------------------------------------------------------
+def test_summary_matches_handrolled_metrics():
+    """summary() returns exactly the per-scheduler metrics the sweeps
+    hand-roll from individual SimResult calls."""
+    res = run_cell("carbon_autoscale", "numpy")
+    s = res.summary()
+    assert s["pods"] == len({r.pod.uid for r in res.records}) \
+        + res.unschedulable
+    assert s["unschedulable_rate"] == res.unschedulable_rate()
+    assert s["preemptions"] == res.preemptions
+    assert s["migrations"] == res.migrations
+    assert s["wakes"] == res.wakes and s["sleeps"] == res.sleeps
+    assert set(s["schedulers"]) == {r.pod.scheduler for r in res.records}
+    for name, m in s["schedulers"].items():
+        assert m["energy_kj"] == res.energy_kj(name)
+        assert m["mean_energy_kj"] == res.mean_energy_kj(name)
+        assert m["mean_sched_time_ms"] == res.mean_sched_time_ms(name)
+        assert m["mean_exec_time_s"] == res.mean_exec_time_s(name)
+        assert m["allocation"] == res.allocation(name)
+        assert m["pods"] == len({r.pod.uid for r in res.records
+                                 if r.pod.scheduler == name})

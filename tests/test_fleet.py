@@ -1,6 +1,5 @@
 """Beyond-paper fleet scheduler: TOPSIS over heterogeneous TPU slices with
 roofline-derived criteria."""
-import numpy as np
 import pytest
 
 from repro.launch import fleet

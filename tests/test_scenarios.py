@@ -16,7 +16,7 @@ import pytest
 
 from repro.core.energy import (NODE_ENERGY_PROFILES, PowerTimeline,
                                merge_intervals, union_length)
-from repro.cluster.node import (Node, SCENARIO_PROFILES, make_paper_cluster,
+from repro.cluster.node import (Node, SCENARIO_PROFILES,
                                 make_scenario_cluster)
 from repro.cluster.simulator import run_experiment, run_scenario, table6
 from repro.cluster.workload import (PaperArrivals, PoissonArrivals,

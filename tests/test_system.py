@@ -2,7 +2,6 @@
 import importlib
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 
