@@ -26,7 +26,13 @@ State is explicit: :class:`SimState` holds the queues (running tasks are
 :class:`RunningTask` dataclasses on a heap, not bare tuples), the records,
 the timeline, per-pod bookkeeping (arrival instants,
 :class:`EvictBlock` same-node restart blocks), and the event counters
-policies publish into. The eviction/requeue machinery
+policies publish into. Cluster capacity lives in a delta-maintained
+:class:`~repro.cluster.node.FleetState` (``SimState.fleet``): commit,
+completion, and eviction mutate its columns in place (O(touched columns)
+per event, with dirty tracking the schedulers' incremental caches consume)
+instead of re-flattening ``Node`` objects into a fresh snapshot per round;
+``SimState.nodes`` is a per-node view over the same objects for policy
+code. The eviction/requeue machinery
 (:meth:`EventEngine.evict`) truncates a victim's record and power segment
 at the eviction instant and hands the pod back for requeueing — carbon
 preemption and consolidation drains are two callers of the same service.
@@ -44,7 +50,7 @@ from repro.core.energy import (NODE_ENERGY_PROFILES, PowerTimeline,
 from repro.core.policy import ARRIVAL, COMPLETION, Event, SchedulingPolicy
 from repro.core.scheduler import (BatchScheduler, DefaultK8sScheduler,
                                   GreenPodScheduler, predict_exec_time)
-from repro.cluster.node import Node, make_paper_cluster
+from repro.cluster.node import FleetState, Node, make_paper_cluster
 from repro.cluster.workload import ArrivalProcess, Pod
 
 
@@ -251,9 +257,16 @@ class SimState:
     :class:`RunningTask`, ``blocked`` the same-node restart blocks keyed by
     pod uid, ``arrival_s`` each pod's burst arrival instant (the deferral
     deadline basis), and the counter fields are what
-    :class:`SimResult` reports."""
+    :class:`SimResult` reports.
 
-    nodes: list[Node]
+    ``fleet`` — a delta-maintained :class:`FleetState` — is the single
+    source of truth for cluster capacity and power states. The kernel
+    mutates it through its column mutators (never the ``Node`` objects
+    directly: that would bypass the dirty tracking the schedulers'
+    incremental caches rely on); ``nodes`` is a read view over the same
+    per-node objects for policy code."""
+
+    fleet: FleetState
     schedulers: dict
     timeline: PowerTimeline
     pending: list[Pod] = dataclasses.field(default_factory=list)
@@ -268,6 +281,12 @@ class SimState:
     migrations: int = 0
     wakes: int = 0
     sleeps: int = 0
+
+    @property
+    def nodes(self) -> list[Node]:
+        """Per-node views over the fleet (same objects ``fleet`` maintains);
+        mutate capacity/power state through ``fleet``, not through these."""
+        return self.fleet.nodes
 
 
 class EventEngine:
@@ -310,7 +329,7 @@ class EventEngine:
         heapq.heapify(st.running)
         pods: list[Pod] = []
         for v in victims:
-            st.nodes[v.node_index].release(v.pod.cpu, v.pod.mem)
+            st.fleet.release(v.node_index, v.pod.cpu, v.pod.mem)
             for pol in self.policies:
                 pol.on_evict(self, v.node_index, t)
             rec = st.records[v.record_index]
@@ -330,7 +349,7 @@ class EventEngine:
         the task's effective start (a WAKING node's ready instant)."""
         st = self.state
         node = st.nodes[idx]
-        node.bind(pod.cpu, pod.mem)
+        st.fleet.bind(idx, pod.cpu, pod.mem)
         start = t
         for pol in self.policies:
             adjusted = pol.on_commit(self, idx, t)
@@ -354,28 +373,30 @@ class EventEngine:
         policies, log the event, return its end time (the backoff step)."""
         st = self.state
         done = heapq.heappop(st.running)
-        st.nodes[done.node_index].release(done.pod.cpu, done.pod.mem)
+        st.fleet.release(done.node_index, done.pod.cpu, done.pod.mem)
         for pol in self.policies:
             pol.on_completion(self, done.node_index, done.end_s)
         st.event_log.append((done.end_s, COMPLETION, done.uid))
         return done.end_s
 
     def _run_burst(self, pods: list[Pod], t: float,
-                   blocked_now: dict[int, int], exclude) -> list[Pod]:
+                   blocked_now: dict[int, int], exclude,
+                   scheduler: str = "topsis") -> list[Pod]:
         """Schedule an arrival burst through one batched scoring pass
-        (``BatchScheduler.select_many``) and commit the assignments.
-        Returns the pods that did not fit. ``blocked_now`` maps pod uid ->
-        a node index the pod must not be committed to this round; the
-        exclusion happens inside ``select_many``'s greedy ledger, so a
-        blocked top choice falls through to the pod's next-ranked node
-        without charging phantom capacity. ``exclude`` ((N,) or (P, N)
-        bool) hard-masks policy-forbidden nodes out of the scoring
-        validity."""
+        (``select_many`` of the named scheduler — bursts are grouped by
+        ``pod.scheduler``, so a mixed queue never scores through the wrong
+        engine) and commit the assignments. Returns the pods that did not
+        fit. ``blocked_now`` maps pod uid -> a node index the pod must not
+        be committed to this round; the exclusion happens inside
+        ``select_many``'s greedy ledger, so a blocked top choice falls
+        through to the pod's next-ranked node without charging phantom
+        capacity. ``exclude`` ((N,) or (P, N) bool) hard-masks
+        policy-forbidden nodes out of the scoring validity."""
         st = self.state
         blocked = ([blocked_now.get(p.uid) for p in pods]
                    if blocked_now else None)
-        assignments, diag = st.schedulers["topsis"].select_many(
-            pods, st.nodes, now=t, blocked=blocked, exclude=exclude)
+        assignments, diag = st.schedulers[scheduler].select_many(
+            pods, st.fleet, now=t, blocked=blocked, exclude=exclude)
         still: list[Pod] = []
         for pod, idx in zip(pods, assignments):
             if idx is None:
@@ -446,17 +467,21 @@ class EventEngine:
                     if p.uid not in held_uids:
                         held.append(p)
                         held_uids.add(p.uid)
-            # scheduling round: place what fits, FIFO retry for the rest
+            # scheduling round: place what fits, FIFO retry for the rest.
+            # Batch-capable schedulers take the burst path, grouped by
+            # pod.scheduler (in first-appearance order) so a mixed queue
+            # routes each group through its own scoring engine
             placed: set[int] = set()
-            burst: list[Pod] = []
+            bursts: dict[str, list[Pod]] = {}
             for pod in st.pending:
                 if pod.uid in held_uids:
                     continue
-                if self.batch and pod.scheduler == "topsis":
-                    burst.append(pod)
+                sched = st.schedulers[pod.scheduler]
+                if self.batch and hasattr(sched, "select_many"):
+                    bursts.setdefault(pod.scheduler, []).append(pod)
                     continue
-                idx, diag = st.schedulers[pod.scheduler].select(
-                    pod, st.nodes, now=t, exclude=_exclude_for(pod))
+                idx, diag = sched.select(
+                    pod, st.fleet, now=t, exclude=_exclude_for(pod))
                 if idx is None:
                     continue
                 if blocked_now.get(pod.uid) == idx:
@@ -467,7 +492,7 @@ class EventEngine:
                     continue
                 self._commit(pod, idx, t, diag["scheduling_time_s"])
                 placed.add(pod.uid)
-            if burst:
+            for group, burst in bursts.items():
                 per_pod = [_exclude_for(p) for p in burst]
                 if any(pp is not base_ex for pp in per_pod):
                     # a policy set per-pod extras: stack to (P, N), padding
@@ -478,7 +503,8 @@ class EventEngine:
                                      for pp in per_pod])
                 else:
                     ex_b = base_ex
-                b_still = self._run_burst(burst, t, blocked_now, ex_b)
+                b_still = self._run_burst(burst, t, blocked_now, ex_b,
+                                          scheduler=group)
                 placed.update({p.uid for p in burst}
                               - {p.uid for p in b_still})
             st.pending = [p for p in st.pending if p.uid not in placed]
@@ -589,7 +615,13 @@ def simulate(arrivals: ArrivalProcess, scheme: str,
         carbon_signal=csig,
         node_region=({n.name: n.region for n in nodes}
                      if csig is not None else None))
-    state = SimState(nodes=nodes, schedulers=schedulers, timeline=timeline)
+    fleet = FleetState.from_nodes(nodes)
+    state = SimState(fleet=fleet, schedulers=schedulers, timeline=timeline)
+    # schedulers adopt the fleet as a live snapshot: scoring rounds sync
+    # only dirty node columns instead of re-flattening the Node list
+    for sched in schedulers.values():
+        if hasattr(sched, "attach"):
+            sched.attach(fleet)
     engine = EventEngine(state, policies, arrivals, batch=batch)
     for pol in policies:
         pol.bind(engine)

@@ -173,6 +173,100 @@ class NodeTable:
                 & (self.free_mem >= mem - 1e-9))
 
 
+@dataclasses.dataclass
+class FleetState(NodeTable):
+    """Delta-maintained :class:`NodeTable`: the event engine's single source
+    of truth for fleet state.
+
+    Where a plain ``NodeTable`` is a throwaway snapshot (rebuilt from the
+    ``Node`` list every scoring call), a ``FleetState`` is *long-lived*: the
+    engine routes every mutation — task commit, completion release, eviction,
+    power-state transition — through :meth:`bind` / :meth:`release` /
+    :meth:`set_power_states`, which update only the touched node's column
+    entries (O(touched columns), no per-round O(N) re-flatten) and keep the
+    backing ``Node`` objects in sync, so policies that read per-node views
+    (``sim.state.nodes[i]``) keep working unchanged.
+
+    Dirty-column contract: every mutation stamps the touched node with a
+    monotonically increasing modification version. A consumer (the
+    schedulers' incremental decision-matrix caches, the jax device mirror)
+    remembers the :attr:`version` it last synced at and asks
+    :meth:`modified_since` for the node indices whose criteria columns must
+    be recomputed — anything else is guaranteed bitwise-identical to a fresh
+    ``NodeTable.from_nodes(nodes)`` rebuild (tests/test_fleet_state.py pins
+    this with a randomized-interleaving property test). Multiple consumers
+    with independent cursors can share one ``FleetState``. Mutating the
+    ``Node`` objects or the column arrays directly (instead of going through
+    the mutators) breaks the contract — consumers would silently serve stale
+    columns.
+    """
+
+    def __post_init__(self):
+        super().__post_init__()
+        # authoritative per-node views (set by from_nodes); kept in sync by
+        # the mutators below so policy code can keep reading Node objects
+        self.nodes: list[Node] = []
+        self._mod = np.zeros(len(self.names), dtype=np.int64)
+        self.version = 0
+
+    @classmethod
+    def from_nodes(cls, nodes: Sequence[Node]) -> "FleetState":
+        fs = super().from_nodes(nodes)
+        fs.nodes = list(nodes)
+        return fs
+
+    def _touch(self, i: int) -> None:
+        self.version += 1
+        self._mod[i] = self.version
+
+    def modified_since(self, version: int) -> np.ndarray:
+        """Indices of nodes mutated after a consumer's last-synced
+        ``version`` (ascending). The consumer should store
+        ``self.version`` as its new cursor *before* recomputing."""
+        return np.flatnonzero(self._mod > version)
+
+    def bind(self, i: int, cpu: float, mem: float) -> None:
+        """Commit ``cpu``/``mem`` on node ``i``: Node object and ``used_*``
+        columns move together, and the node is marked dirty."""
+        node = self.nodes[i]
+        node.bind(cpu, mem)
+        self.used_cpu[i] = node.used_cpu
+        self.used_mem[i] = node.used_mem
+        self._touch(i)
+
+    def release(self, i: int, cpu: float, mem: float) -> None:
+        """Release ``cpu``/``mem`` on node ``i`` (completion or eviction)."""
+        node = self.nodes[i]
+        node.release(cpu, mem)
+        self.used_cpu[i] = node.used_cpu
+        self.used_mem[i] = node.used_mem
+        self._touch(i)
+
+    def set_power_states(self, states: "Sequence[str | None]") -> None:
+        """Sync the power-state column to ``states`` (one entry per node),
+        touching only nodes whose state actually changed — the elastic
+        fleet rewrites all N states every round, but a round typically
+        transitions a handful of nodes. State changes dirty the node
+        because the ``awake`` mask feeds the energy and carbon-rate
+        criteria columns."""
+        changed = [i for i, (old, new)
+                   in enumerate(zip(self.power_state, states)) if old != new]
+        if not changed:
+            return
+        if self._state_known is None:
+            self._state_known = np.asarray(
+                [s is not None for s in self.power_state])
+            self._state_awake = np.asarray(
+                [s is not None and s != ASLEEP for s in self.power_state])
+        for i in changed:
+            s = states[i]
+            self.power_state[i] = s
+            self.nodes[i].power_state = s
+            self._state_known[i] = s is not None
+            self._state_awake[i] = s is not None and s != ASLEEP
+            self._touch(i)
+
+
 # Paper Table-I capacities (vcpus, mem_gb) per node class, and the capacity
 # jitter applied to synthetic fleets — shared by make_fleet and
 # make_scenario_cluster so the two fleet generators never desynchronize.
@@ -181,12 +275,12 @@ NODE_CAPS: dict[str, tuple[float, float]] = {
 CAP_SCALES = (1, 2, 4)
 
 
-def make_fleet(n: int, seed: int = 0, utilization: float = 0.0,
-               regions: Sequence[str] = DEFAULT_REGIONS) -> NodeTable:
-    """Synthetic heterogeneous fleet of ``n`` nodes for benchmarks/examples:
-    the paper's Table-I node classes replicated with jittered capacities and
-    (optionally) random pre-existing load. Nodes are spread round-robin
-    across ``regions`` (inert unless a carbon signal is attached)."""
+def make_fleet_nodes(n: int, seed: int = 0, utilization: float = 0.0,
+                     regions: Sequence[str] = DEFAULT_REGIONS) -> list[Node]:
+    """The ``Node`` objects behind :func:`make_fleet` — same rng stream,
+    same values, but as mutable per-node views. Feed to
+    :meth:`FleetState.from_nodes` when the fleet must be *maintained*
+    (incremental engine rounds) rather than snapshotted once."""
     rng = np.random.default_rng(seed)
     classes = list(NODE_CAPS)
     nodes = []
@@ -196,12 +290,23 @@ def make_fleet(n: int, seed: int = 0, utilization: float = 0.0,
         scale = float(rng.choice(CAP_SCALES))
         nodes.append(Node(f"node-{i:05d}", cls_i, vcpus * scale, mem * scale,
                           region=regions[i % len(regions)]))
-    table = NodeTable.from_nodes(nodes)
     if utilization > 0.0:
         u = rng.uniform(0.0, min(2.0 * utilization, 0.95), n)
-        table.used_cpu[:] = u * (table.vcpus - table.reserved_cpu)
-        table.used_mem[:] = u * (table.mem_gb - table.reserved_mem)
-    return table
+        for node, ui in zip(nodes, u):
+            node.used_cpu = float(ui * (node.vcpus - node.reserved_cpu))
+            node.used_mem = float(ui * (node.mem_gb - node.reserved_mem))
+    return nodes
+
+
+def make_fleet(n: int, seed: int = 0, utilization: float = 0.0,
+               regions: Sequence[str] = DEFAULT_REGIONS) -> NodeTable:
+    """Synthetic heterogeneous fleet of ``n`` nodes for benchmarks/examples:
+    the paper's Table-I node classes replicated with jittered capacities and
+    (optionally) random pre-existing load. Nodes are spread round-robin
+    across ``regions`` (inert unless a carbon signal is attached)."""
+    return NodeTable.from_nodes(make_fleet_nodes(n, seed=seed,
+                                                 utilization=utilization,
+                                                 regions=regions))
 
 
 # Scenario fleet class mixes: probability of each Table-I node class.
@@ -218,7 +323,7 @@ def make_scenario_cluster(profile: str, n: int, seed: int = 0,
                           regions: Sequence[str] = DEFAULT_REGIONS
                           ) -> list[Node]:
     """Scenario fleet for the event-driven engine: ``n`` mutable ``Node``
-    objects (4 ≤ n ≤ 8192) whose class mix follows ``SCENARIO_PROFILES``.
+    objects (4 ≤ n ≤ 131072) whose class mix follows ``SCENARIO_PROFILES``.
 
     The first four nodes are one of each Table-I class at paper capacities
     (every fleet keeps the paper's heterogeneity axis; unlike
@@ -227,14 +332,15 @@ def make_scenario_cluster(profile: str, n: int, seed: int = 0,
     jitter of :func:`make_fleet`. Nodes are spread round-robin across
     ``regions`` (drives the carbon column when a signal is attached;
     inert otherwise). Deterministic in ``seed`` — scenario runs replay
-    exactly. Burst scoring converts these to a :class:`NodeTable`
-    snapshot per round (``BatchScheduler.select_many``).
+    exactly. The engine wraps these in a delta-maintained
+    :class:`FleetState` (burst scoring recomputes only dirty node columns,
+    which is what lets scenario fleets scale past the old 8192 ceiling).
     """
     if profile not in SCENARIO_PROFILES:
         raise ValueError(f"unknown profile {profile!r}; "
                          f"choose from {sorted(SCENARIO_PROFILES)}")
-    if not 4 <= n <= 8192:
-        raise ValueError(f"fleet size {n} outside [4, 8192]")
+    if not 4 <= n <= 131072:
+        raise ValueError(f"fleet size {n} outside [4, 131072]")
     rng = np.random.default_rng(seed)
     mix = SCENARIO_PROFILES[profile]
     classes = list(mix)

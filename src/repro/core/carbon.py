@@ -311,6 +311,13 @@ class CarbonScheduling(SchedulingPolicy):
 
     One instance drives one run (it accumulates the once-per-pod
     preemption set); ``run_scenario`` constructs a fresh one per call.
+
+    The carbon_rate criterion itself needs no hook here: the schedulers'
+    incremental caches (``repro.core.scheduler.FleetCriteriaCache``) cache
+    the time-invariant power factor per node and refresh the intensity
+    product whenever decision time moves — the column is never stale with
+    respect to the signal, and eviction/requeue dirties the touched nodes
+    through the FleetState mutators like any other capacity change.
     """
 
     def __init__(self, policy: CarbonPolicy):

@@ -68,6 +68,66 @@ def benefit_mask(criteria=GREENPOD_CRITERIA) -> np.ndarray:
     return np.array([c.benefit for c in criteria], dtype=bool)
 
 
+# --- decision-matrix column computation --------------------------------------
+# Single source of the criteria arithmetic for both the full-rebuild path
+# (repro.core.scheduler.decision_matrix_table) and the dirty-column refresh
+# of the incremental FleetState caches. Every operation is elementwise per
+# node — no cross-node reduction happens before TOPSIS scoring — which is
+# the property that makes subset recomputation bitwise-identical to slicing
+# a full rebuild: computing columns for the dirty node indices alone yields
+# exactly the floats a fresh ``NodeTable.from_nodes`` rebuild would.
+def criteria_matrix(cpu, mem, base_time_s, table,
+                    carbon_intensity=None, cols=None) -> np.ndarray:
+    """(..., N', C) GreenPod criteria block over ``table``'s column arrays
+    (``CRITERIA_NAMES`` order; C = 5, or 6 with ``carbon_intensity``).
+
+    ``cpu`` / ``mem`` / ``base_time_s`` are scalars for one pod or ``(P, 1)``
+    request columns for a queue. ``cols`` optionally restricts the block to
+    a node-index subset (the dirty-column recompute path): N' is then
+    ``len(cols)``, and — because the arithmetic is elementwise per node —
+    the block equals the corresponding columns of the full matrix bitwise.
+    ``carbon_intensity`` must already be sliced to ``cols`` by the caller
+    (it is a per-node column too)."""
+    from repro.core.energy import predicted_task_energy_joules_np
+
+    sl = slice(None) if cols is None else cols
+    speed = table.speed[sl]
+    awake = table.awake[sl]
+    exec_t = base_time_s / speed
+    energy = predicted_task_energy_joules_np(
+        table.dyn_power_per_vcpu[sl], table.idle_power[sl], exec_t, cpu,
+        awake)
+    cpu_after = (table.reserved_cpu[sl] + table.used_cpu[sl]
+                 + cpu) / table.vcpus[sl]
+    mem_after = (table.reserved_mem[sl] + table.used_mem[sl]
+                 + mem) / table.mem_gb[sl]
+    rows = [
+        np.broadcast_to(exec_t, cpu_after.shape),
+        energy,
+        np.maximum(1.0 - cpu_after, 0.0),    # core availability
+        np.maximum(1.0 - mem_after, 0.0),    # memory availability
+        1.0 - np.abs(cpu_after - mem_after),
+    ]
+    if carbon_intensity is not None:
+        rows.append(placement_power(cpu, table, cols=cols)
+                    * np.asarray(carbon_intensity, dtype=np.float64))
+    return np.stack(rows, axis=-1).astype(np.float64, copy=False)
+
+
+def placement_power(cpu, table, cols=None) -> np.ndarray:
+    """(..., N') marginal power draw (W) of placing ``cpu`` vCPUs on each
+    node of ``table`` (optionally restricted to the ``cols`` subset):
+    the carbon_rate criterion is this times grid intensity. Split out of
+    :func:`criteria_matrix` so the incremental caches can refresh the
+    carbon column alone when only decision time ``now`` moved (the power
+    factor is time-invariant; the intensity column is not)."""
+    from repro.core.energy import predicted_power_w_np
+
+    sl = slice(None) if cols is None else cols
+    return predicted_power_w_np(table.dyn_power_per_vcpu[sl],
+                                table.idle_power[sl], cpu, table.awake[sl])
+
+
 # Fleet-level criteria (beyond-paper: TOPSIS over TPU slices; values derived
 # from compiled roofline terms — see repro.launch.fleet).
 FLEET_CRITERIA: tuple[Criterion, ...] = (

@@ -176,6 +176,13 @@ class ElasticFleet:
         self.nodes = nodes
         self.policy = policy
         self.timeline = timeline
+        # optional delta-maintained FleetState (the engine's source of
+        # truth): when attached, write_states mirrors power-state changes
+        # into its columns — marking transitioned nodes dirty, which is
+        # what keeps the schedulers' incremental energy/carbon criteria
+        # (they depend on the awake mask) in sync — and wake scoring runs
+        # against it instead of re-flattening the Node list
+        self.table = None
         n = len(nodes)
         self._running = [0] * n
         # when the node last became empty (None while ACTIVE or WAKING)
@@ -213,11 +220,15 @@ class ElasticFleet:
         return [self.state(i, t) for i in range(len(self.nodes))]
 
     def write_states(self, t: float) -> list[str]:
-        """Refresh every ``Node.power_state`` (the column ``NodeTable``
-        snapshots feed the awake/marginal-idle criterion from)."""
+        """Refresh every ``Node.power_state`` (the column the
+        awake/marginal-idle criterion derives from); with an attached
+        :attr:`table` the FleetState column is synced too, dirtying exactly
+        the nodes that transitioned."""
         sts = self.states(t)
         for node, s in zip(self.nodes, sts):
             node.power_state = s
+        if self.table is not None:
+            self.table.set_power_states(sts)
         return sts
 
     def exclude_mask(self, t: float) -> np.ndarray:
@@ -368,7 +379,9 @@ class ElasticFleet:
                     break
             if covered:
                 continue
-            idx = _best_node(sched, pod, self.nodes, t, exclude=~asleep)
+            idx = _best_node(sched, pod,
+                             self.table if self.table is not None
+                             else self.nodes, t, exclude=~asleep)
             if idx is None:
                 continue                 # fits no sleeping node either
             self.request_wake(idx, t)
@@ -504,6 +517,9 @@ class AutoscaleScheduling(SchedulingPolicy):
     def bind(self, sim) -> None:
         self.fleet = ElasticFleet(sim.state.nodes, self.policy,
                                   sim.state.timeline)
+        # adopt the engine's FleetState so power-state transitions land in
+        # its columns (dirty-tracked) the moment write_states runs
+        self.fleet.table = getattr(sim.state, "fleet", None)
 
     def on_clock(self, sim, t: float) -> None:
         self.fleet.advance_to(t)

@@ -27,12 +27,11 @@ import numpy as np
 
 from repro.core import topsis
 from repro.core.carbon import CarbonSignal
-from repro.core.criteria import benefit_mask, greenpod_criteria
-from repro.core.energy import (predicted_power_w_np,
-                               predicted_task_energy_joules,
-                               predicted_task_energy_joules_np)
+from repro.core.criteria import (benefit_mask, criteria_matrix,
+                                 greenpod_criteria, placement_power)
+from repro.core.energy import predicted_task_energy_joules
 from repro.core.weighting import CARBON_SCHEMES, adaptive_weights, weights_for
-from repro.cluster.node import Node, NodeTable
+from repro.cluster.node import FleetState, Node, NodeTable
 from repro.cluster.workload import Pod
 
 _BENEFIT = benefit_mask()
@@ -67,24 +66,12 @@ def decision_matrix_table(cpu, mem, base_time_s, table: NodeTable,
     ``carbon_intensity`` (the (N,) gCO2/kWh column for the fleet's regions
     at decision time) is given — the sixth column is the placement's
     emission rate: power draw (dynamic for the request, plus the idle power
-    a sleeping node would newly wake) x regional intensity."""
-    exec_t = base_time_s / table.speed
-    energy = predicted_task_energy_joules_np(
-        table.dyn_power_per_vcpu, table.idle_power, exec_t, cpu, table.awake)
-    cpu_after = (table.reserved_cpu + table.used_cpu + cpu) / table.vcpus
-    mem_after = (table.reserved_mem + table.used_mem + mem) / table.mem_gb
-    rows = [
-        np.broadcast_to(exec_t, cpu_after.shape),
-        energy,
-        np.maximum(1.0 - cpu_after, 0.0),    # core availability
-        np.maximum(1.0 - mem_after, 0.0),    # memory availability
-        1.0 - np.abs(cpu_after - mem_after),
-    ]
-    if carbon_intensity is not None:
-        power_w = predicted_power_w_np(table.dyn_power_per_vcpu,
-                                       table.idle_power, cpu, table.awake)
-        rows.append(power_w * np.asarray(carbon_intensity, dtype=np.float64))
-    return np.stack(rows, axis=-1).astype(np.float64, copy=False)
+    a sleeping node would newly wake) x regional intensity. The arithmetic
+    lives in :func:`repro.core.criteria.criteria_matrix` — the same code
+    the incremental :class:`FleetCriteriaCache` uses to refresh dirty node
+    columns, so the two paths agree bitwise by construction."""
+    return criteria_matrix(cpu, mem, base_time_s, table,
+                           carbon_intensity=carbon_intensity)
 
 
 def decision_matrix(pod: Pod, nodes, carbon_intensity=None) -> np.ndarray:
@@ -132,6 +119,143 @@ def _check_carbon_scheme(scheme: str, carbon_signal) -> None:
             f"(repro.core.carbon.CarbonSignal) to use it")
 
 
+class FleetCriteriaCache:
+    """Incrementally maintained decision-matrix cache over one attached
+    :class:`~repro.cluster.node.FleetState`.
+
+    The insight that makes the cache cheap: pods come in a handful of
+    workload *kinds* (identical ``(cpu, mem, base_time_s)`` request
+    triples), and the criteria arithmetic is elementwise per node — so one
+    ``(K, N, C)`` float64 tensor (K = kinds seen so far) covers every pod,
+    and a pod's ``(N, C)`` matrix is a zero-copy row view. Per round
+    :meth:`sync` consumes the fleet's dirty-column contract
+    (``modified_since``): only columns of nodes touched since the last
+    sync are recomputed (through ``repro.core.criteria.criteria_matrix``,
+    the same code the full-rebuild oracle uses — bitwise agreement by
+    construction), and the carbon_rate column is refreshed from the cached
+    time-invariant power factor whenever decision time moves.
+
+    Returned matrices/rows are views into the cache: read-only until the
+    next :meth:`sync`.
+    """
+
+    def __init__(self, fleet: FleetState, carbon_signal: CarbonSignal | None):
+        self.fleet = fleet
+        self.signal = carbon_signal
+        self.n_criteria = 6 if carbon_signal is not None else 5
+        self._kinds: dict[tuple, int] = {}    # request triple -> row index
+        self._reqs: list[tuple] = []
+        n = len(fleet)
+        self.mats = np.zeros((0, n, self.n_criteria))
+        self._power_w = np.zeros((0, n))      # carbon power factor per kind
+        self._synced = fleet.version
+        self._carbon_now: float | None = None
+        self.intensities: np.ndarray | None = None   # (N,) at _carbon_now
+
+    def _kind_of(self, pod: Pod) -> tuple:
+        return (pod.cpu, pod.mem, pod.workload.base_time_s)
+
+    def _full_row(self, req: tuple) -> tuple[np.ndarray, np.ndarray]:
+        cpu, mem, bts = req
+        mat = np.zeros((len(self.fleet), self.n_criteria))
+        mat[:, :5] = criteria_matrix(cpu, mem, bts, self.fleet)
+        power = np.zeros(0)
+        if self.signal is not None:
+            power = placement_power(cpu, self.fleet)
+            mat[:, 5] = power * self.intensities
+        return mat, power
+
+    def sync(self, pods: Sequence[Pod], now: float):
+        """Bring the cache up to date with the fleet and decision time;
+        returns ``(kind_idx, dirty, carbon_moved, grew)`` — the per-pod row
+        indices, the node indices whose columns were recomputed, whether
+        the whole carbon column was refreshed (``now`` moved), and whether
+        new kind rows were appended (device mirrors re-upload on growth)."""
+        fleet = self.fleet
+        dirty = fleet.modified_since(self._synced)
+        self._synced = fleet.version
+        carbon_moved = False
+        if self.signal is not None and now != self._carbon_now:
+            self.intensities = np.asarray(
+                self.signal.intensities(fleet.region, now), dtype=np.float64)
+            self._carbon_now = now
+            carbon_moved = True
+        if dirty.size and self._reqs:
+            col = lambda xs: np.asarray(xs, dtype=np.float64)[:, None]
+            cpus, mems, bts = (col([r[j] for r in self._reqs])
+                               for j in range(3))
+            self.mats[:, dirty, :5] = criteria_matrix(cpus, mems, bts,
+                                                      fleet, cols=dirty)
+            if self.signal is not None:
+                self._power_w[:, dirty] = placement_power(cpus, fleet,
+                                                          cols=dirty)
+        if self.signal is not None and self._reqs:
+            # the carbon column is (time-invariant power) x (intensity at
+            # now): refresh all nodes when now moved, else just the dirty
+            # subset — elementwise either way, so bitwise-equal to a full
+            # rebuild at the same instant
+            if carbon_moved:
+                self.mats[:, :, 5] = self._power_w * self.intensities
+            elif dirty.size:
+                self.mats[:, dirty, 5] = (self._power_w[:, dirty]
+                                          * self.intensities[dirty])
+        grew = False
+        kind_idx = np.empty(len(pods), dtype=np.int64)
+        for i, pod in enumerate(pods):
+            req = self._kind_of(pod)
+            k = self._kinds.get(req)
+            if k is None:
+                mat, power = self._full_row(req)
+                k = len(self._reqs)
+                self._kinds[req] = k
+                self._reqs.append(req)
+                self.mats = np.concatenate([self.mats, mat[None]])
+                if self.signal is not None:
+                    self._power_w = np.concatenate(
+                        [self._power_w, power[None]])
+                grew = True
+            kind_idx[i] = k
+        return kind_idx, dirty, carbon_moved, grew
+
+
+def _jit_helpers():
+    """The incremental jax path's jitted helpers, built lazily so importing
+    the scheduler never pays jax tracing up front."""
+    global _scatter_node_cols, _set_carbon_col, _closeness_from_kinds
+    if _scatter_node_cols is not None:
+        return
+    import functools
+
+    import jax
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def _scatter_node_cols(dev, idx, block):
+        # donated: the old snapshot's buffer is reused in place, so a round
+        # never holds two (K, N, C) copies on device
+        return dev.at[:, idx, :].set(block)
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def _set_carbon_col(dev, col):
+        return dev.at[:, :, -1].set(col)
+
+    @jax.jit
+    def _closeness_from_kinds(dev, kind_idx, ws, benefit, valids):
+        # gather the per-kind rows and score in ONE dispatch; the closeness
+        # body is topsis.batched_closeness — the same program the
+        # full-rebuild jax path jits, so the two agree on identical inputs
+        return topsis.batched_closeness(dev[kind_idx], ws, benefit,
+                                        valids).closeness
+
+
+_scatter_node_cols = None
+_set_carbon_col = None
+_closeness_from_kinds = None
+
+
+def _pow2_pad_len(n: int) -> int:
+    return 1 << max(n - 1, 1).bit_length()
+
+
 class GreenPodScheduler:
     """TOPSIS-based multi-criteria scheduler (paper §III).
 
@@ -153,6 +277,14 @@ class GreenPodScheduler:
         self.criteria = greenpod_criteria(carbon=carbon_signal is not None)
         self._benefit = benefit_mask(self.criteria)
         self.decision_log: list[dict] = []
+        self._cache: FleetCriteriaCache | None = None
+
+    def attach(self, fleet: FleetState) -> None:
+        """Adopt ``fleet`` as a live, delta-maintained snapshot: subsequent
+        ``select`` calls that receive this exact object reuse the
+        incrementally synced decision-matrix cache instead of rebuilding
+        the pod's (N, C) matrix from scratch."""
+        self._cache = FleetCriteriaCache(fleet, self.carbon_signal)
 
     def weights(self, nodes) -> np.ndarray:
         carbon = self.carbon_signal is not None
@@ -173,11 +305,15 @@ class GreenPodScheduler:
             valid = valid & ~np.asarray(exclude, dtype=bool)
         if not valid.any():
             return None, {"reason": "unschedulable"}
-        inten = (self.carbon_signal.intensities(table.region, now)
-                 if self.carbon_signal is not None else None)
-        mat = decision_matrix_table(pod.cpu, pod.mem,
-                                    pod.workload.base_time_s, table,
-                                    carbon_intensity=inten)
+        if self._cache is not None and table is self._cache.fleet:
+            kind_idx, _, _, _ = self._cache.sync([pod], now)
+            mat = self._cache.mats[kind_idx[0]]
+        else:
+            inten = (self.carbon_signal.intensities(table.region, now)
+                     if self.carbon_signal is not None else None)
+            mat = decision_matrix_table(pod.cpu, pod.mem,
+                                        pod.workload.base_time_s, table,
+                                        carbon_intensity=inten)
         cc = _score(mat, self.weights(table), valid, self.backend,
                     benefit=self._benefit)
         idx = int(np.argmax(cc))   # first max — same tie-break as a stable sort
@@ -215,6 +351,18 @@ class BatchScheduler:
         self.criteria = greenpod_criteria(carbon=carbon_signal is not None)
         self._benefit = benefit_mask(self.criteria)
         self.decision_log: list[dict] = []
+        self._cache: FleetCriteriaCache | None = None
+        self._dev = None          # device-resident (K, N, C) float32 mirror
+
+    def attach(self, fleet: FleetState) -> None:
+        """Adopt ``fleet`` as a live, delta-maintained snapshot. Scoring
+        calls that receive this exact object take the incremental path:
+        only dirty node columns are recomputed, and (jax backend) the
+        per-kind criteria tensor stays device-resident across rounds —
+        dirty columns are scattered into the donated buffer and a round is
+        one fused gather+closeness dispatch."""
+        self._cache = FleetCriteriaCache(fleet, self.carbon_signal)
+        self._dev = None
 
     def weights(self, table: NodeTable) -> np.ndarray:
         carbon = self.carbon_signal is not None
@@ -230,8 +378,15 @@ class BatchScheduler:
         the carbon column is evaluated at (ignored without a signal).
         ``exclude`` — (N,) or (P, N) bool — masks nodes the engine forbids
         (sleeping nodes; per-pod deadline-late WAKING nodes), folded into
-        the validity mask every backend already honors."""
+        the validity mask every backend already honors.
+
+        When ``nodes`` is the attached :class:`FleetState` this takes the
+        incremental path; any other input scores through the full-rebuild
+        path below, which is kept verbatim as the reference oracle
+        (tests/test_fleet_state.py asserts the two agree bitwise)."""
         table = _as_table(nodes)
+        if self._cache is not None and table is self._cache.fleet:
+            return self._score_queue_incremental(pods, table, now, exclude)
         inten = (self.carbon_signal.intensities(table.region, now)
                  if self.carbon_signal is not None else None)
         mats = decision_matrix_batch(pods, table, carbon_intensity=inten)
@@ -268,6 +423,79 @@ class BatchScheduler:
                 mats, ws, self._benefit, valid=valid))
         raise ValueError(f"unknown backend {self.backend!r}; "
                          f"choose from {BACKENDS}")
+
+    def _score_queue_incremental(self, pods: Sequence[Pod],
+                                 fleet: FleetState, now: float,
+                                 exclude) -> np.ndarray:
+        """The one-dispatch round over the attached fleet: sync the
+        per-kind criteria cache (dirty columns only), then score every pod
+        as a row gather — numpy reads zero-copy views, jax gathers from
+        the device-resident mirror, pallas streams kind blocks through the
+        scalar-prefetch kernel."""
+        cache = self._cache
+        kind_idx, dirty, carbon_moved, grew = cache.sync(pods, now)
+        valid = fleet.fits(np.asarray([p.cpu for p in pods])[:, None],
+                           np.asarray([p.mem for p in pods])[:, None])
+        if exclude is not None:
+            valid = valid & ~np.asarray(exclude, dtype=bool)
+        w = self.weights(fleet)
+        ws = np.broadcast_to(w, (len(pods), w.shape[0]))
+        if self.backend == "numpy":
+            return np.stack([
+                np.asarray(topsis.closeness_np(cache.mats[k], ws[i],
+                                               self._benefit,
+                                               valid[i]).closeness)
+                for i, k in enumerate(kind_idx)])
+        if self.backend == "jax":
+            import jax.numpy as jnp
+            _jit_helpers()
+            self._sync_device(cache, dirty, carbon_moved, grew)
+            # same pod-axis pow2 padding as the rebuild path (jit caches by
+            # shape; shrinking retry bursts reuse the trace). Padding rows
+            # gather kind 0 but are all-invalid -> -inf, sliced off.
+            p = len(pods)
+            p_pad = _pow2_pad_len(p)
+            if p_pad != p:
+                pad = p_pad - p
+                kind_idx = np.concatenate(
+                    [kind_idx, np.zeros(pad, dtype=kind_idx.dtype)])
+                ws = np.concatenate([ws, np.ones((pad, ws.shape[-1]))])
+                valid = np.concatenate(
+                    [valid, np.zeros((pad, valid.shape[-1]), bool)])
+            cc = _closeness_from_kinds(
+                self._dev, jnp.asarray(kind_idx), jnp.asarray(ws),
+                jnp.asarray(self._benefit), jnp.asarray(valid))
+            return np.asarray(cc[:p])
+        if self.backend == "pallas":
+            from repro.kernels import ops
+            return np.asarray(ops.topsis_closeness_kinds(
+                cache.mats, kind_idx, ws, self._benefit, valid=valid))
+        raise ValueError(f"unknown backend {self.backend!r}; "
+                         f"choose from {BACKENDS}")
+
+    def _sync_device(self, cache: FleetCriteriaCache, dirty: np.ndarray,
+                     carbon_moved: bool, grew: bool) -> None:
+        """Mirror this round's cache delta onto the device tensor. Growth
+        (a kind first seen — at most once per workload kind per run)
+        re-uploads the whole (K, N, C) tensor; otherwise the dirty node
+        columns are scattered into the donated buffer (idx padded to a
+        power of two with repeats so the scatter trace is shape-stable),
+        and the carbon column is rewritten only when decision time moved."""
+        import jax.numpy as jnp
+        if self._dev is None or grew:
+            self._dev = jnp.asarray(cache.mats.astype(np.float32))
+            return
+        if dirty.size:
+            d_pad = _pow2_pad_len(dirty.size)
+            idx = np.concatenate(
+                [dirty, np.full(d_pad - dirty.size, dirty[0],
+                                dtype=dirty.dtype)])
+            block = cache.mats[:, idx, :].astype(np.float32)
+            self._dev = _scatter_node_cols(self._dev, jnp.asarray(idx),
+                                           jnp.asarray(block))
+        if carbon_moved and self.carbon_signal is not None:
+            col = cache.mats[:, :, -1].astype(np.float32)
+            self._dev = _set_carbon_col(self._dev, jnp.asarray(col))
 
     def select_many(self, pods: Sequence[Pod], nodes, now: float = 0.0,
                     blocked: "Sequence[int | None] | None" = None,

@@ -133,6 +133,59 @@ def topsis_closeness_batched(mats: jax.Array, weights: jax.Array,
     return cc
 
 
+def topsis_closeness_kinds(mats_kinds: jax.Array, kind_idx: jax.Array,
+                           weights: jax.Array, benefit: jax.Array, *,
+                           valid: jax.Array | None = None,
+                           block_n: int | None = None,
+                           interpret: bool | None = None) -> jax.Array:
+    """(P, N) closeness from a deduplicated (K, N, C) kind tensor plus a
+    (P,) pod->kind index; C <= 8. The incremental batch path: the fleet
+    criteria cache keeps one matrix per workload *kind* (K is small — the
+    paper's workload mix has three), so the kernel streams K criteria
+    tensors instead of P near-duplicate pod copies.
+
+    Per-pod column norms are gathered from per-kind norms — bitwise equal
+    to the per-pod reduction because each pod's rows ARE its kind's rows.
+    Ideal points stay per pod (``valid`` differs pod to pod) and run in
+    XLA; ``weights`` is (C,) shared or (P, C) per pod; result semantics
+    (invalid -> -inf) match :func:`topsis_closeness_batched`.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    mats_kinds = jnp.asarray(mats_kinds).astype(jnp.float32)
+    k, n, c = mats_kinds.shape
+    kind_idx = jnp.asarray(kind_idx, jnp.int32)
+    p = kind_idx.shape[0]
+    assert c <= _tp.C_PAD, f"at most {_tp.C_PAD} criteria, got {c}"
+    benefit = jnp.asarray(benefit, bool)
+    if valid is not None:
+        valid = jnp.asarray(valid, bool)
+    w = jnp.asarray(weights, jnp.float32)
+    if w.ndim == 1:
+        w = jnp.broadcast_to(w, (p, c))
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), _EPS)
+    knorms = jnp.sqrt(jnp.sum(mats_kinds * mats_kinds, axis=1))   # (K, C)
+    inv_norm = (1.0 / jnp.maximum(knorms, _EPS))[kind_idx]        # (P, C)
+    v = mats_kinds[kind_idx] * inv_norm[:, None, :] * w[:, None, :]
+    a_pos, a_neg = _topsis.masked_ideal_points(v, benefit, valid)  # (P, C)
+
+    if block_n is None:
+        block_n = _auto_block_n(n)
+    xt = _pad_to(_pad_to(mats_kinds.transpose(0, 2, 1), 1, _tp.C_PAD),
+                 2, block_n)
+
+    def col(x):  # (P, C) -> (P, C_PAD, 1)
+        return _pad_to(x.astype(jnp.float32), 1, _tp.C_PAD)[:, :, None]
+
+    cc = _tp.topsis_closeness_kinds_blocks(
+        kind_idx, xt, col(inv_norm), col(w), col(a_pos), col(a_neg),
+        block_n=block_n, interpret=interpret)
+    cc = cc[:, 0, :n]
+    if valid is not None:
+        cc = jnp.where(valid, cc, -jnp.inf)
+    return cc
+
+
 # --- RMSNorm ----------------------------------------------------------------
 def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6, *,
             block_rows: int = 256, interpret: bool | None = None) -> jax.Array:

@@ -18,6 +18,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 LANE = 128
 C_PAD = 8          # criteria padded to one sublane group
@@ -109,3 +110,61 @@ def topsis_closeness_batched_blocks(xt: jax.Array, inv_norm: jax.Array,
         out_shape=jax.ShapeDtypeStruct((p, 1, n_pad), jnp.float32),
         interpret=interpret,
     )(xt, inv_norm, w, a_pos, a_neg)
+
+
+def _topsis_kinds_kernel(kind_ref, xt_ref, inv_norm_ref, w_ref, a_pos_ref,
+                         a_neg_ref, cc_ref):
+    """One (pod, node-block) grid cell of the kind-indexed form: the
+    scalar-prefetch ``kind_ref`` steered this pod's criteria block — the
+    BlockSpec index map reads ``kind_ref[b]`` — so ``xt_ref`` holds the
+    (1, C_PAD, BLOCK_N) block of the pod's *workload kind*, not a per-pod
+    copy. Math is identical to :func:`_topsis_batched_kernel`; the small
+    operands stay per pod (each pod's feasibility mask shapes its ideal
+    points even when the raw criteria rows are shared)."""
+    del kind_ref       # consumed by the index maps, not the kernel body
+    xt = xt_ref[...].astype(jnp.float32)
+    v = xt * inv_norm_ref[...] * w_ref[...]
+    dp = v - a_pos_ref[...]
+    dn = v - a_neg_ref[...]
+    d_pos = jnp.sqrt(jnp.sum(dp * dp, axis=1, keepdims=True))
+    d_neg = jnp.sqrt(jnp.sum(dn * dn, axis=1, keepdims=True))
+    denom = d_pos + d_neg
+    cc = d_neg / jnp.maximum(denom, _EPS)
+    cc_ref[...] = jnp.where(denom <= _EPS, 0.5, cc)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def topsis_closeness_kinds_blocks(kind_idx: jax.Array, xt: jax.Array,
+                                  inv_norm: jax.Array, w: jax.Array,
+                                  a_pos: jax.Array, a_neg: jax.Array,
+                                  block_n: int = DEFAULT_BLOCK_N,
+                                  interpret: bool = False) -> jax.Array:
+    """Kind-indexed whole-queue scoring: xt (K, C_PAD, N_pad) holds one
+    criteria tensor per *workload kind* (K << P), ``kind_idx`` (P,) int32
+    maps each pod to its kind row, and per-pod small operands stay
+    (P, C_PAD, 1). The grid is still (pods, node blocks), but the kernel
+    streams each kind's blocks from HBM instead of P near-duplicate pod
+    copies — the bandwidth saving that lets the batch path scale past the
+    (P, N, C) materialization ceiling. Returns (P, 1, N_pad)."""
+    k, c_pad, n_pad = xt.shape
+    p = kind_idx.shape[0]
+    assert c_pad == C_PAD and n_pad % block_n == 0, (xt.shape, block_n)
+    grid = (p, n_pad // block_n)
+    small = pl.BlockSpec((1, C_PAD, 1), lambda b, i, kind_ref: (b, 0, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, C_PAD, block_n),
+                         lambda b, i, kind_ref: (kind_ref[b], 0, i)),
+            small, small, small, small,
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_n),
+                               lambda b, i, kind_ref: (b, 0, i)),
+    )
+    return pl.pallas_call(
+        _topsis_kinds_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((p, 1, n_pad), jnp.float32),
+        interpret=interpret,
+    )(kind_idx, xt, inv_norm, w, a_pos, a_neg)
