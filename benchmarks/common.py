@@ -10,8 +10,11 @@ cell logic and defaults.
 from __future__ import annotations
 
 import argparse
+import datetime
 import itertools
 import json
+import platform
+import subprocess
 from typing import Iterable, Iterator, Sequence
 
 # The batched backends every sweep defaults to; pallas is opt-in
@@ -90,8 +93,44 @@ def iter_cells(profiles: Iterable, node_counts: Iterable,
     return itertools.product(profiles, node_counts, variants, backends)
 
 
+def _git_sha() -> str | None:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, check=True).stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        return None
+
+
+def provenance() -> dict:
+    """Environment fingerprint for a recorded report: without it a
+    BENCH_*.json number is unattributable — was it CPU interpret-mode
+    pallas or a real TPU, which jax, which commit, when?"""
+    prov: dict = {
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "git_sha": _git_sha(),
+        "utc_timestamp": datetime.datetime.now(datetime.timezone.utc)
+                                 .isoformat(timespec="seconds"),
+    }
+    try:
+        import jax
+        from repro.kernels.ops import _on_tpu
+        prov["jax_version"] = jax.__version__
+        prov["jax_platform"] = jax.default_backend()
+        # the default the pallas wrappers resolve `interpret=None` to
+        prov["pallas_interpret"] = not _on_tpu()
+    except Exception as e:               # jax broken/absent: record why
+        prov["jax_version"] = None
+        prov["jax_error"] = repr(e)
+    return prov
+
+
 def write_report(report: dict, out: str | None) -> dict:
-    """Emit a sweep's JSON report (no-op when ``out`` is falsy)."""
+    """Emit a sweep's JSON report with a :func:`provenance` block stamped
+    in (no-op when ``out`` is falsy; an explicit block in ``report`` is
+    kept)."""
+    report.setdefault("provenance", provenance())
     if out:
         with open(out, "w") as f:
             json.dump(report, f, indent=1)

@@ -73,19 +73,27 @@ def aggregate(out: str | None = "BENCH_summary.json") -> dict:
                   f"benchmark (skipping)")
             continue
         try:
-            summary[name] = _headline(name, data)
+            head = _headline(name, data)
         except (AttributeError, KeyError, TypeError, ZeroDivisionError) as e:
             print(f"warning: {name} has an unexpected shape ({e!r}) — "
                   f"re-run its sweep benchmark (skipping)")
+            continue
+        # carry each sweep's recorded environment fingerprint forward so
+        # the summary's numbers stay attributable without the sweep files
+        if isinstance(data.get("provenance"), dict):
+            head["provenance"] = data["provenance"]
+        summary[name] = head
     if not summary:
         print("no BENCH_*.json recorded yet; run the sweep benchmarks first")
         return summary
     print(f"{'sweep':28s} headline")
     for name, head in summary.items():
         extras = {k: v for k, v in head.items()
-                  if k not in ("bench", "cells")}
+                  if k not in ("bench", "cells", "provenance")}
         print(f"{head['bench']:28s} {head['cells']} cells  "
               + "  ".join(f"{k}={v}" for k, v in extras.items()))
+    from benchmarks.common import provenance
+    summary["provenance"] = provenance()
     if out:
         with open(out, "w") as f:
             json.dump(summary, f, indent=1)

@@ -180,3 +180,57 @@ for name, kj in runs.items():
     if name != "no policy (always-on)":
         print(f"  {name:22s}: {100.0 * (1.0 - kj / base):.1f}% less fleet "
               f"idle energy than the always-on baseline")
+
+# --- flight recorder: telemetry, decision latency, Perfetto trace ---------------
+# Re-run the carbon+autoscale scenario with the flight recorder on. The
+# recorder is a pure observer (placements and energy totals are bitwise
+# identical with it enabled — tests/test_telemetry.py pins this); what it
+# adds is the operator view: engine/cache counters, per-decision latency
+# histograms, and a Chrome trace-event file for ui.perfetto.dev with one
+# track group per node (task lanes + power states) and one per policy.
+from repro.core import telemetry
+from repro.telemetry.export import write_perfetto
+
+with telemetry.enabled() as tel:
+    res = run_scenario(carbon_arrivals(), "carbon_centric",
+                       cluster_factory=mixed_fleet, batch=True,
+                       batch_backend="jax", carbon=policy,
+                       autoscale=AutoscalePolicy(idle_timeout_s=60.0))
+print("\n--- flight recorder: carbon+autoscale scenario, telemetry on")
+print(f"  events: "
+      + "  ".join(f"{k}={int(tel.counter_value('engine_events', kind=k))}"
+                  for k in ("arrival", "completion", "carbon_check",
+                            "wake_done")))
+print(f"  rounds {len([s for s in tel.spans if s['name'] == 'engine_round'])}"
+      f"  deferral holds "
+      f"{int(tel.counter_value('policy_deferred_pods', policy='CarbonScheduling'))}"
+      f"  wakes "
+      f"{int(tel.counter_value('policy_node_wakes', policy='AutoscaleScheduling'))}")
+hist = tel.histogram("scheduler_batch_seconds", scheduler="topsis-batch",
+                     backend="jax")
+if hist is not None:
+    print(f"  batch decision latency ({hist.count} rounds, "
+          f"min {hist.min * 1e3:.2f} ms, max {hist.max * 1e3:.2f} ms):")
+    for edge, c in zip(hist.edges, hist.counts):
+        if c:
+            print(f"    le {edge * 1e3:9.3f} ms : {'#' * c} {c}")
+trace_path = write_perfetto(res, "fleet_scheduler.trace.json",
+                            trace_name="carbon+autoscale demo")
+print(f"  wrote {trace_path} — open at https://ui.perfetto.dev")
+
+# --- why TOPSIS picked that node: per-criterion attribution ---------------------
+# explain=True (numpy scoring) records, per decision, how each criterion
+# moved the winner-vs-runner-up closeness gap — the deltas sum to the gap
+# exactly, so "why this node" reads off as six signed numbers.
+res = run_scenario(elastic_arrivals(), "energy_centric",
+                   cluster_factory=mixed_fleet, batch=True,
+                   batch_backend="numpy", explain=True)
+exp = max((e for e in res.explanations if e["runner_up"] is not None),
+          key=lambda e: abs(e["gap"]))
+print(f"\n--- decision explainability: pod {exp['pod']} -> {exp['node']} "
+      f"(runner-up {exp['runner_up_node']}, "
+      f"gap {exp['gap']:+.4f} closeness)")
+for c in sorted(exp["contributions"], key=lambda c: -abs(c["delta_cc"])):
+    print(f"  {c['criterion']:16s} delta_cc {c['delta_cc']:+.4f}   "
+          f"winner {c['winner_value']:10.4f}  vs  "
+          f"runner-up {c['runner_up_value']:10.4f}")

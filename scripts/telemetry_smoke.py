@@ -1,0 +1,62 @@
+"""CI smoke lane for the flight recorder.
+
+Runs one small carbon+autoscale scenario with telemetry enabled, checks
+the pure-observer invariant against a recording-free run of the same
+scenario, and writes both exporter outputs — a Prometheus text snapshot
+and a Perfetto trace (validated against the trace-event schema) that CI
+uploads as an artifact, so every PR leaves an openable
+ui.perfetto.dev trace of the scheduling engine behind.
+
+Run: PYTHONPATH=src python scripts/telemetry_smoke.py [out_dir]
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+_TESTS_DIR = os.path.join(os.path.dirname(__file__), os.pardir, "tests")
+sys.path.insert(0, _TESTS_DIR)
+
+from engine_golden_spec import run_cell              # noqa: E402
+from repro.core import telemetry                     # noqa: E402
+from repro.telemetry.export import (perfetto_trace,  # noqa: E402
+                                    prometheus_text, validate_trace,
+                                    write_perfetto)
+
+
+def main() -> None:
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    baseline = run_cell("carbon_autoscale", "numpy")
+    with telemetry.enabled() as tel:
+        res = run_cell("carbon_autoscale", "numpy")
+
+    # pure-observer invariant: recording changed nothing
+    assert [r.node for r in res.records] == [r.node
+                                             for r in baseline.records]
+    assert res.energy_kj("topsis") == baseline.energy_kj("topsis")
+    assert res.fleet_idle_energy_kj() == baseline.fleet_idle_energy_kj()
+    # ...and the recorder demonstrably recorded
+    assert tel.counter_value("engine_events", kind="arrival") > 0
+    assert any(s["name"] == "engine_round" for s in tel.spans)
+
+    prom_path = os.path.join(out_dir, "telemetry_smoke.prom")
+    with open(prom_path, "w") as f:
+        f.write(prometheus_text(tel))
+    print(f"wrote {prom_path} "
+          f"({len(tel.counters)} counters, {len(tel.gauges)} gauges, "
+          f"{len(tel.histograms)} histograms, {len(tel.spans)} spans)")
+
+    trace = perfetto_trace(res, trace_name="telemetry smoke")
+    stats = validate_trace(trace)
+    trace_path = write_perfetto(
+        res, os.path.join(out_dir, "telemetry_smoke.trace.json"),
+        trace_name="telemetry smoke")
+    print(f"wrote {trace_path} ({stats['spans']} spans, "
+          f"{stats['instants']} instants, {stats['tracks']} tracks) — "
+          f"open at https://ui.perfetto.dev")
+
+
+if __name__ == "__main__":
+    main()

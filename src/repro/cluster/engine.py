@@ -45,6 +45,7 @@ from typing import Callable, Sequence
 
 import numpy as np
 
+from repro.core import telemetry
 from repro.core.energy import (NODE_ENERGY_PROFILES, PowerTimeline,
                                task_energy_joules)
 from repro.core.policy import ARRIVAL, COMPLETION, Event, SchedulingPolicy
@@ -105,6 +106,8 @@ class SimResult:
     # processed-event log: (t, kind, payload) per kernel event, in clock
     # order (None for results constructed outside the kernel)
     events: list | None = None
+    # per-decision TOPSIS attributions (explain=True runs; None otherwise)
+    explanations: list | None = None
 
     def _timeline(self) -> PowerTimeline:
         """The run's power timeline (rebuilt from records for results
@@ -245,6 +248,8 @@ class SimResult:
                 "mean_exec_time_s": self.mean_exec_time_s(s),
                 "allocation": self.allocation(s),
             }
+        if self.explanations:
+            out["explanations"] = self.explanations
         return out
 
 
@@ -324,6 +329,7 @@ class EventEngine:
         still-WAKING node has ``start_s > t`` — it never ran, so its
         partial attempt clamps to zero runtime/energy."""
         st = self.state
+        telemetry.active().inc("engine_evictions", value=float(len(victims)))
         gone = {v.uid for v in victims}
         st.running[:] = [rt for rt in st.running if rt.uid not in gone]
         heapq.heapify(st.running)
@@ -367,6 +373,7 @@ class EventEngine:
                        RunningTask(start + rt, pod.uid, pod, idx,
                                    len(st.records) - 1,
                                    len(st.timeline.segments) - 1))
+        telemetry.active().inc("engine_commits", scheduler=pod.scheduler)
 
     def _pop_release(self) -> float:
         """Pop the earliest completion, release its resources, notify the
@@ -377,6 +384,7 @@ class EventEngine:
         for pol in self.policies:
             pol.on_completion(self, done.node_index, done.end_s)
         st.event_log.append((done.end_s, COMPLETION, done.uid))
+        telemetry.active().inc("engine_events", kind=COMPLETION)
         return done.end_s
 
     def _run_burst(self, pods: list[Pod], t: float,
@@ -410,6 +418,7 @@ class EventEngine:
         st = self.state
         policies = self.policies
         events = self._events
+        tel = telemetry.active()
         ei = 0
         while True:
             # ingest every burst due by the current clock
@@ -421,6 +430,7 @@ class EventEngine:
                     st.arrival_s.setdefault(p.uid, burst_t)
                 st.pending.extend(burst_pods)
                 st.event_log.append((burst_t, ARRIVAL, len(burst_pods)))
+                tel.inc("engine_events", kind=ARRIVAL)
                 ei += 1
             # safety net: release anything that finished before now (the
             # advance step never moves the clock past an unreleased
@@ -430,92 +440,106 @@ class EventEngine:
             if not st.pending and not st.running and ei >= len(events):
                 break
             t = st.t
+            # queue-depth gauges, sampled once per clock instant's round
+            tel.set_gauge("engine_pending_depth", float(len(st.pending)))
+            tel.set_gauge("engine_running_tasks", float(len(st.running)))
             for pol in policies:
                 pol.on_clock(self, t)
-            # round-start mutations: carbon preemption evictions, the
-            # consolidation drain pass — requeued pods re-enter this
-            # round's pending queue
-            for pol in policies:
-                pol.on_round_start(self, t)
-            blocked_now = {uid: b.node_index
-                           for uid, b in st.blocked.items() if b.t == t}
-            # exclusion masks for this round: the OR of every policy's
-            # fleet-wide mask, plus per-pod extras (a policy may forbid
-            # specific nodes for specific pods — deadline-late WAKING
-            # nodes for deferrable pods)
-            base_ex = None
-            for pol in policies:
-                m = pol.exclude_mask(self, t)
-                if m is not None:
-                    base_ex = m if base_ex is None else (base_ex | m)
-
-            def _exclude_for(pod: Pod):
-                # per-pod extras run even when no policy set a fleet-wide
-                # mask (base may be None — a policy can be purely per-pod)
-                mask = base_ex
+            with tel.span("engine_round"):
+                # round-start mutations: carbon preemption evictions, the
+                # consolidation drain pass — requeued pods re-enter this
+                # round's pending queue
                 for pol in policies:
-                    extra = pol.exclude_for(self, pod, mask, t)
-                    if extra is not None:
-                        mask = extra
-                return mask
-            # deferral filter: policies hold pods out of this round (they
-            # keep their queue position and retry at the policy's wake)
-            held: list[Pod] = []
-            held_uids: set[int] = set()
-            for pol in policies:
-                for p in pol.filter_pending(self, st.pending, t):
-                    if p.uid not in held_uids:
+                    pol.on_round_start(self, t)
+                blocked_now = {uid: b.node_index
+                               for uid, b in st.blocked.items() if b.t == t}
+                # exclusion masks for this round: the OR of every policy's
+                # fleet-wide mask, plus per-pod extras (a policy may forbid
+                # specific nodes for specific pods — deadline-late WAKING
+                # nodes for deferrable pods)
+                base_ex = None
+                for pol in policies:
+                    m = pol.exclude_mask(self, t)
+                    if m is not None:
+                        base_ex = m if base_ex is None else (base_ex | m)
+
+                def _exclude_for(pod: Pod):
+                    # per-pod extras run even when no policy set a
+                    # fleet-wide mask (base may be None — a policy can be
+                    # purely per-pod)
+                    mask = base_ex
+                    for pol in policies:
+                        extra = pol.exclude_for(self, pod, mask, t)
+                        if extra is not None:
+                            mask = extra
+                    return mask
+                # deferral filter: policies hold pods out of this round
+                # (they keep their queue position and retry at the
+                # policy's wake)
+                held: list[Pod] = []
+                held_uids: set[int] = set()
+                for pol in policies:
+                    n_held = 0
+                    for p in pol.filter_pending(self, st.pending, t):
+                        if p.uid not in held_uids:
+                            held.append(p)
+                            held_uids.add(p.uid)
+                            n_held += 1
+                    if n_held:
+                        tel.inc("policy_deferred_pods", value=float(n_held),
+                                policy=type(pol).__name__)
+                # scheduling round: place what fits, FIFO retry for the
+                # rest. Batch-capable schedulers take the burst path,
+                # grouped by pod.scheduler (in first-appearance order) so
+                # a mixed queue routes each group through its own scoring
+                # engine
+                placed: set[int] = set()
+                bursts: dict[str, list[Pod]] = {}
+                for pod in st.pending:
+                    if pod.uid in held_uids:
+                        continue
+                    sched = st.schedulers[pod.scheduler]
+                    if self.batch and hasattr(sched, "select_many"):
+                        bursts.setdefault(pod.scheduler, []).append(pod)
+                        continue
+                    idx, diag = sched.select(
+                        pod, st.fleet, now=t, exclude=_exclude_for(pod))
+                    if idx is None:
+                        continue
+                    if blocked_now.get(pod.uid) == idx:
+                        # blocked instant same-node restart: wait like a
+                        # deferred pod (guarantees a wake event to retry
+                        # on)
+                        held.append(pod)
+                        held_uids.add(pod.uid)
+                        continue
+                    self._commit(pod, idx, t, diag["scheduling_time_s"])
+                    placed.add(pod.uid)
+                for group, burst in bursts.items():
+                    per_pod = [_exclude_for(p) for p in burst]
+                    if any(pp is not base_ex for pp in per_pod):
+                        # a policy set per-pod extras: stack to (P, N),
+                        # padding unmasked pods with the base (or an empty
+                        # mask)
+                        fill = (base_ex if base_ex is not None
+                                else np.zeros(len(st.nodes), dtype=bool))
+                        ex_b = np.stack([pp if pp is not None else fill
+                                         for pp in per_pod])
+                    else:
+                        ex_b = base_ex
+                    b_still = self._run_burst(burst, t, blocked_now, ex_b,
+                                              scheduler=group)
+                    placed.update({p.uid for p in burst}
+                                  - {p.uid for p in b_still})
+                st.pending = [p for p in st.pending if p.uid not in placed]
+                # evicted-but-unplaced victims wait like held pods (the
+                # block lapses once t advances)
+                for p in st.pending:
+                    if p.uid in blocked_now and p.uid not in held_uids:
                         held.append(p)
                         held_uids.add(p.uid)
-            # scheduling round: place what fits, FIFO retry for the rest.
-            # Batch-capable schedulers take the burst path, grouped by
-            # pod.scheduler (in first-appearance order) so a mixed queue
-            # routes each group through its own scoring engine
-            placed: set[int] = set()
-            bursts: dict[str, list[Pod]] = {}
-            for pod in st.pending:
-                if pod.uid in held_uids:
-                    continue
-                sched = st.schedulers[pod.scheduler]
-                if self.batch and hasattr(sched, "select_many"):
-                    bursts.setdefault(pod.scheduler, []).append(pod)
-                    continue
-                idx, diag = sched.select(
-                    pod, st.fleet, now=t, exclude=_exclude_for(pod))
-                if idx is None:
-                    continue
-                if blocked_now.get(pod.uid) == idx:
-                    # blocked instant same-node restart: wait like a
-                    # deferred pod (guarantees a wake event to retry on)
-                    held.append(pod)
-                    held_uids.add(pod.uid)
-                    continue
-                self._commit(pod, idx, t, diag["scheduling_time_s"])
-                placed.add(pod.uid)
-            for group, burst in bursts.items():
-                per_pod = [_exclude_for(p) for p in burst]
-                if any(pp is not base_ex for pp in per_pod):
-                    # a policy set per-pod extras: stack to (P, N), padding
-                    # unmasked pods with the base (or an empty mask)
-                    fill = (base_ex if base_ex is not None
-                            else np.zeros(len(st.nodes), dtype=bool))
-                    ex_b = np.stack([pp if pp is not None else fill
-                                     for pp in per_pod])
-                else:
-                    ex_b = base_ex
-                b_still = self._run_burst(burst, t, blocked_now, ex_b,
-                                          scheduler=group)
-                placed.update({p.uid for p in burst}
-                              - {p.uid for p in b_still})
-            st.pending = [p for p in st.pending if p.uid not in placed]
-            # evicted-but-unplaced victims wait like held pods (the block
-            # lapses once t advances)
-            for p in st.pending:
-                if p.uid in blocked_now and p.uid not in held_uids:
-                    held.append(p)
-                    held_uids.add(p.uid)
-            for pol in policies:
-                pol.on_round_end(self, st.pending, held, t)
+                for pol in policies:
+                    pol.on_round_end(self, st.pending, held, t)
             # advance the clock to the earliest candidate event:
             # completion, arrival burst, or a policy wake
             next_arrival = events[ei][0] if ei < len(events) else None
@@ -553,6 +577,7 @@ class EventEngine:
                 st.t = next_wake
                 st.event_log.append((wake_ev.t, wake_ev.kind,
                                      wake_ev.payload))
+                tel.inc("engine_events", kind=wake_ev.kind)
                 wake_pol.on_tick(self, wake_ev)
                 continue
             if st.pending:
@@ -572,18 +597,30 @@ class EventEngine:
             self._pop_release()
         for pol in policies:
             pol.finalize(self, horizon)
+        if tel.enabled:
+            # end-of-run rollups (observer-only; guarded so disabled runs
+            # skip the ledger walk entirely)
+            st.timeline.publish_telemetry(tel)
+            tel.set_gauge("engine_unschedulable", float(st.unschedulable))
+        explanations: list | None = None
+        for sched in st.schedulers.values():
+            ex = getattr(sched, "explanations", None)
+            if ex:
+                explanations = (explanations or []) + ex
         return SimResult(st.records, st.unschedulable, st.timeline,
                          preemptions=st.preemptions,
                          migrations=st.migrations,
                          wakes=st.wakes, sleeps=st.sleeps,
-                         events=st.event_log)
+                         events=st.event_log,
+                         explanations=explanations)
 
 
 def simulate(arrivals: ArrivalProcess, scheme: str,
              cluster_factory: Callable[[], list[Node]] = make_paper_cluster,
              adaptive: bool = False, batch: bool = False,
              batch_backend: str = "jax",
-             policies: Sequence[SchedulingPolicy] = ()) -> SimResult:
+             policies: Sequence[SchedulingPolicy] = (),
+             explain: bool = False) -> SimResult:
     """Build a run (fleet, schedulers, timeline) and drive it through the
     kernel with the given ordered policy list.
 
@@ -592,6 +629,12 @@ def simulate(arrivals: ArrivalProcess, scheme: str,
     run's power timeline (carbon accounting). With no policies the kernel
     reduces to the policy-free event loop — arrival and completion events
     only — and reproduces the pre-kernel engine bitwise.
+
+    ``explain=True`` turns on per-decision TOPSIS attribution: every
+    placement records the winner-vs-runner-up per-criterion closeness
+    contributions (``SimResult.explanations``; surfaced in
+    ``summary()``). Numpy scoring only — a batch run on jax/pallas
+    raises at its first scoring round.
     """
     policies = tuple(policies)
     nodes = cluster_factory()
@@ -606,9 +649,11 @@ def simulate(arrivals: ArrivalProcess, scheme: str,
     schedulers = {
         "topsis": (BatchScheduler(scheme, adaptive=adaptive,
                                   backend=batch_backend,
-                                  carbon_signal=csig) if batch
+                                  carbon_signal=csig,
+                                  explain=explain) if batch
                    else GreenPodScheduler(scheme, adaptive=adaptive,
-                                          carbon_signal=csig)),
+                                          carbon_signal=csig,
+                                          explain=explain)),
         "default": DefaultK8sScheduler(),
     }
     timeline = PowerTimeline(

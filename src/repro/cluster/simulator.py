@@ -49,7 +49,8 @@ def run_scenario(arrivals: ArrivalProcess, scheme: str,
                  adaptive: bool = False, batch: bool = False,
                  batch_backend: str = "jax",
                  carbon: CarbonPolicy | None = None,
-                 autoscale: AutoscalePolicy | None = None) -> SimResult:
+                 autoscale: AutoscalePolicy | None = None,
+                 explain: bool = False) -> SimResult:
     """Drive one scenario through the event-driven kernel.
 
     Events are pod-arrival bursts (from ``arrivals``) and task completions
@@ -67,6 +68,10 @@ def run_scenario(arrivals: ArrivalProcess, scheme: str,
     each maps onto one ``SchedulingPolicy`` implementation, composed in
     the fixed order ``[carbon, autoscale]``. With both at ``None`` the
     kernel runs policy-free and reproduces the legacy engine bitwise.
+
+    ``explain=True`` records per-decision TOPSIS attributions
+    (``SimResult.explanations``; numpy scoring only — see
+    :func:`repro.cluster.engine.simulate`).
     """
     policies = []
     if carbon is not None:
@@ -75,7 +80,8 @@ def run_scenario(arrivals: ArrivalProcess, scheme: str,
         policies.append(AutoscaleScheduling(autoscale))
     return simulate(arrivals, scheme, cluster_factory=cluster_factory,
                     adaptive=adaptive, batch=batch,
-                    batch_backend=batch_backend, policies=policies)
+                    batch_backend=batch_backend, policies=policies,
+                    explain=explain)
 
 
 def run_experiment(level: str, scheme: str,

@@ -38,6 +38,7 @@ from typing import Sequence
 
 import numpy as np
 
+from repro.core import telemetry
 from repro.core.policy import CARBON_CHECK, Event, SchedulingPolicy
 
 J_PER_KWH = 3.6e6
@@ -362,6 +363,9 @@ class CarbonScheduling(SchedulingPolicy):
             self.preempted.add(task.uid)
             sim.block_restart(task.uid, task.node_index, t)
         st.preemptions += len(victims)
+        telemetry.active().inc("policy_preemptions",
+                               value=float(len(victims)),
+                               policy=type(self).__name__)
 
     def filter_pending(self, sim, pods, t: float):
         pol = self.policy

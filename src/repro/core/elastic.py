@@ -54,6 +54,7 @@ from typing import Callable, Sequence
 
 import numpy as np
 
+from repro.core import telemetry
 from repro.core.energy import NODE_ENERGY_PROFILES
 from repro.core.policy import (CONSOLIDATE_TICK, WAKE_DONE, Event,
                                SchedulingPolicy)
@@ -269,6 +270,8 @@ class ElasticFleet:
                 node.name, node.node_class, ASLEEP, max(due, since), upto,
                 NODE_WAKE_PROFILES[node.node_class]["sleep_power_w"])
             self.sleeps += 1
+            telemetry.active().inc("policy_node_sleeps",
+                                   policy="AutoscaleScheduling")
         self._idle_since[i] = None
         self._sleep_at[i] = None
 
@@ -327,6 +330,8 @@ class ElasticFleet:
         self.timeline.add_wake(node.name, node.node_class, t,
                                prof["wake_energy_j"])
         self.wakes += 1
+        telemetry.active().inc("policy_node_wakes",
+                               policy="AutoscaleScheduling")
         return self._wake_ready[i]
 
     def force_sleep(self, i: int, t: float) -> None:
@@ -539,6 +544,9 @@ class AutoscaleScheduling(SchedulingPolicy):
                 # same-round arrival contention
                 st.pending[:0] = sim.evict(victims, t)
                 st.migrations += len(victims)
+                telemetry.active().inc("policy_drained_tasks",
+                                       value=float(len(victims)),
+                                       policy=type(self).__name__)
                 for i in drain_idxs:
                     self.fleet.force_sleep(i, t)
         self.next_consolidate = t + self.policy.consolidate_interval_s

@@ -434,6 +434,38 @@ class PowerTimeline:
         ledger's (requires a carbon signal, like :meth:`total_carbon_g`)."""
         return self.total_carbon_g(None) + self.state_carbon_g()
 
+    # --- telemetry (observer-only rollups) -----------------------------------
+    def publish_telemetry(self, tel) -> None:
+        """Roll the energy ledgers up into gauges on ``tel``: per-node
+        dynamic (task) energy, per-node per-state ledger energy and
+        residency seconds, per-node wake-surge energy, and the fleet
+        totals. Read-only over both ledgers — callers guard on
+        ``tel.enabled`` so disabled runs never pay the walk."""
+        dyn: dict[str, float] = {}
+        for s in self.segments:
+            dyn[s.node] = dyn.get(s.node, 0.0) + s.energy_j
+        for node, e in dyn.items():
+            tel.set_gauge("node_dynamic_energy_j", e, node=node)
+        state_e: dict[tuple[str, str], float] = {}
+        state_s: dict[tuple[str, str], float] = {}
+        for iv in self.state_intervals:
+            key = (iv.node, iv.state)
+            state_e[key] = state_e.get(key, 0.0) + iv.energy_j
+            state_s[key] = state_s.get(key, 0.0) + (iv.end_s - iv.start_s)
+        for (node, state), e in state_e.items():
+            tel.set_gauge("node_state_energy_j", e, node=node, state=state)
+            tel.set_gauge("node_state_seconds", state_s[(node, state)],
+                          node=node, state=state)
+        wake: dict[str, float] = {}
+        for w in self.wake_transitions:
+            wake[w.node] = wake.get(w.node, 0.0) + w.energy_j
+        for node, e in wake.items():
+            tel.set_gauge("node_wake_energy_j", e, node=node)
+        tel.set_gauge("fleet_dynamic_energy_kj",
+                      self.dynamic_energy_j(None) / 1000.0)
+        tel.set_gauge("fleet_idle_energy_kj", self.fleet_idle_energy_kj())
+        tel.set_gauge("fleet_energy_kj", self.fleet_energy_kj())
+
 
 # --- TPU fleet (beyond-paper) ----------------------------------------------
 TPU_V5E_TDP_W = 250.0        # per-chip board power envelope

@@ -20,12 +20,11 @@ Backends (scoring engines, identical semantics — tests assert equivalence):
 """
 from __future__ import annotations
 
-import time
 from typing import Sequence
 
 import numpy as np
 
-from repro.core import topsis
+from repro.core import telemetry, topsis
 from repro.core.carbon import CarbonSignal
 from repro.core.criteria import (benefit_mask, criteria_matrix,
                                  greenpod_criteria, placement_power)
@@ -171,6 +170,7 @@ class FleetCriteriaCache:
         indices, the node indices whose columns were recomputed, whether
         the whole carbon column was refreshed (``now`` moved), and whether
         new kind rows were appended (device mirrors re-upload on growth)."""
+        tel = telemetry.active()
         fleet = self.fleet
         dirty = fleet.modified_since(self._synced)
         self._synced = fleet.version
@@ -200,6 +200,7 @@ class FleetCriteriaCache:
                 self.mats[:, dirty, 5] = (self._power_w[:, dirty]
                                           * self.intensities[dirty])
         grew = False
+        new_kinds = 0
         kind_idx = np.empty(len(pods), dtype=np.int64)
         for i, pod in enumerate(pods):
             req = self._kind_of(pod)
@@ -214,7 +215,15 @@ class FleetCriteriaCache:
                     self._power_w = np.concatenate(
                         [self._power_w, power[None]])
                 grew = True
+                new_kinds += 1
             kind_idx[i] = k
+        tel.inc("cache_syncs")
+        if dirty.size:
+            tel.inc("cache_dirty_columns", value=float(dirty.size))
+        if carbon_moved:
+            tel.inc("cache_carbon_refreshes")
+        if new_kinds:
+            tel.inc("cache_kind_rows_added", value=float(new_kinds))
         return kind_idx, dirty, carbon_moved, grew
 
 
@@ -268,7 +277,8 @@ class GreenPodScheduler:
 
     def __init__(self, scheme: str = "energy_centric", adaptive: bool = False,
                  backend: str = "numpy",
-                 carbon_signal: CarbonSignal | None = None):
+                 carbon_signal: CarbonSignal | None = None,
+                 explain: bool = False):
         _check_carbon_scheme(scheme, carbon_signal)
         self.scheme = scheme
         self.adaptive = adaptive
@@ -277,6 +287,8 @@ class GreenPodScheduler:
         self.criteria = greenpod_criteria(carbon=carbon_signal is not None)
         self._benefit = benefit_mask(self.criteria)
         self.decision_log: list[dict] = []
+        self.explain = explain
+        self.explanations: list[dict] = []
         self._cache: FleetCriteriaCache | None = None
 
     def attach(self, fleet: FleetState) -> None:
@@ -293,32 +305,58 @@ class GreenPodScheduler:
         util = float(np.mean(_as_table(nodes).cpu_util))
         return adaptive_weights(self.scheme, util, carbon=carbon)
 
-    def select(self, pod: Pod, nodes, now: float = 0.0, exclude=None):
+    def select(self, pod: Pod, nodes, now: float = 0.0, exclude=None,
+               explain: bool = False):
         """Best node for one pod; ``exclude`` optionally masks nodes the
         engine forbids this round (ASLEEP nodes, or WAKING nodes whose
         ready time would start a deferrable pod past its deadline) — they
-        are treated exactly like capacity-infeasible nodes."""
-        t0 = time.perf_counter()
-        table = _as_table(nodes)
-        valid = table.fits(pod.cpu, pod.mem)
-        if exclude is not None:
-            valid = valid & ~np.asarray(exclude, dtype=bool)
-        if not valid.any():
-            return None, {"reason": "unschedulable"}
-        if self._cache is not None and table is self._cache.fleet:
-            kind_idx, _, _, _ = self._cache.sync([pod], now)
-            mat = self._cache.mats[kind_idx[0]]
-        else:
-            inten = (self.carbon_signal.intensities(table.region, now)
-                     if self.carbon_signal is not None else None)
-            mat = decision_matrix_table(pod.cpu, pod.mem,
-                                        pod.workload.base_time_s, table,
-                                        carbon_intensity=inten)
-        cc = _score(mat, self.weights(table), valid, self.backend,
-                    benefit=self._benefit)
-        idx = int(np.argmax(cc))   # first max — same tie-break as a stable sort
-        dt = time.perf_counter() - t0
+        are treated exactly like capacity-infeasible nodes. With
+        ``explain=True`` (or the scheduler constructed with it) the
+        decision's per-criterion attribution (``topsis.explain_np``) is
+        appended to ``self.explanations`` and returned in the diagnostics
+        — numpy backend only (the jax/pallas engines do not expose the
+        weighted intermediates)."""
+        explain = explain or self.explain
+        if explain and self.backend != "numpy":
+            raise ValueError(
+                f"explain=True needs backend='numpy', not "
+                f"{self.backend!r}: only the numpy path exposes the "
+                f"weighted separation terms the attribution decomposes")
+        w = None
+        with telemetry.active().span("scheduler_decision",
+                                     scheduler=self.name,
+                                     backend=self.backend) as sp:
+            table = _as_table(nodes)
+            valid = table.fits(pod.cpu, pod.mem)
+            if exclude is not None:
+                valid = valid & ~np.asarray(exclude, dtype=bool)
+            if not valid.any():
+                return None, {"reason": "unschedulable"}
+            if self._cache is not None and table is self._cache.fleet:
+                kind_idx, _, _, _ = self._cache.sync([pod], now)
+                mat = self._cache.mats[kind_idx[0]]
+            else:
+                inten = (self.carbon_signal.intensities(table.region, now)
+                         if self.carbon_signal is not None else None)
+                mat = decision_matrix_table(pod.cpu, pod.mem,
+                                            pod.workload.base_time_s, table,
+                                            carbon_intensity=inten)
+            w = self.weights(table)
+            cc = _score(mat, w, valid, self.backend, benefit=self._benefit)
+            idx = int(np.argmax(cc))   # first max — same tie-break as a
+            #                            stable sort
+        dt = sp.duration_s
         diag = {"closeness": cc, "scheduling_time_s": dt, "matrix": mat}
+        if explain:
+            exp = topsis.explain_np(mat, w, self._benefit, valid,
+                                    criteria_names=[c.name
+                                                    for c in self.criteria])
+            exp.update(pod=pod.uid, t=now, node=table.names[idx],
+                       runner_up_node=(table.names[exp["runner_up"]]
+                                       if exp["runner_up"] is not None
+                                       else None))
+            self.explanations.append(exp)
+            diag["explanation"] = exp
         self.decision_log.append({"pod": pod.uid, "node": table.names[idx],
                                   "time_s": dt})
         return idx, diag
@@ -342,7 +380,8 @@ class BatchScheduler:
 
     def __init__(self, scheme: str = "energy_centric", adaptive: bool = False,
                  backend: str = "jax",
-                 carbon_signal: CarbonSignal | None = None):
+                 carbon_signal: CarbonSignal | None = None,
+                 explain: bool = False):
         _check_carbon_scheme(scheme, carbon_signal)
         self.scheme = scheme
         self.adaptive = adaptive
@@ -351,6 +390,8 @@ class BatchScheduler:
         self.criteria = greenpod_criteria(carbon=carbon_signal is not None)
         self._benefit = benefit_mask(self.criteria)
         self.decision_log: list[dict] = []
+        self.explain = explain
+        self.explanations: list[dict] = []
         self._cache: FleetCriteriaCache | None = None
         self._dev = None          # device-resident (K, N, C) float32 mirror
 
@@ -386,7 +427,10 @@ class BatchScheduler:
         (tests/test_fleet_state.py asserts the two agree bitwise)."""
         table = _as_table(nodes)
         if self._cache is not None and table is self._cache.fleet:
+            telemetry.active().inc("scheduler_score_queue",
+                                   path="incremental")
             return self._score_queue_incremental(pods, table, now, exclude)
+        telemetry.active().inc("scheduler_score_queue", path="rebuild")
         inten = (self.carbon_signal.intensities(table.region, now)
                  if self.carbon_signal is not None else None)
         mats = decision_matrix_batch(pods, table, carbon_intensity=inten)
@@ -465,6 +509,7 @@ class BatchScheduler:
             cc = _closeness_from_kinds(
                 self._dev, jnp.asarray(kind_idx), jnp.asarray(ws),
                 jnp.asarray(self._benefit), jnp.asarray(valid))
+            telemetry.active().inc("cache_fused_dispatches", backend="jax")
             return np.asarray(cc[:p])
         if self.backend == "pallas":
             from repro.kernels import ops
@@ -482,10 +527,14 @@ class BatchScheduler:
         power of two with repeats so the scatter trace is shape-stable),
         and the carbon column is rewritten only when decision time moved."""
         import jax.numpy as jnp
+        tel = telemetry.active()
         if self._dev is None or grew:
+            tel.inc("cache_device_reuploads",
+                    reason="growth" if self._dev is not None else "first")
             self._dev = jnp.asarray(cache.mats.astype(np.float32))
             return
         if dirty.size:
+            tel.inc("cache_device_scatters")
             d_pad = _pow2_pad_len(dirty.size)
             idx = np.concatenate(
                 [dirty, np.full(d_pad - dirty.size, dirty[0],
@@ -494,12 +543,44 @@ class BatchScheduler:
             self._dev = _scatter_node_cols(self._dev, jnp.asarray(idx),
                                            jnp.asarray(block))
         if carbon_moved and self.carbon_signal is not None:
+            tel.inc("cache_device_carbon_updates")
             col = cache.mats[:, :, -1].astype(np.float32)
             self._dev = _set_carbon_col(self._dev, jnp.asarray(col))
 
+    def _explain_batch(self, pods, table, now, exclude, assignments) -> None:
+        """Per-pod attribution for one batch round (numpy path): rebuild
+        each pod's (N, C) matrix and validity exactly as ``score_queue``
+        saw them and decompose winner vs runner-up. ``node`` records the
+        greedy ledger's actual commit — it can differ from the scoring
+        ``winner`` when an earlier pod took the capacity."""
+        names = [c.name for c in self.criteria]
+        if self._cache is not None and table is self._cache.fleet:
+            # fleet untouched since the scoring sync -> dirty is empty and
+            # these are the same cache rows score_queue just read
+            kind_idx, _, _, _ = self._cache.sync(pods, now)
+            mats = [self._cache.mats[k] for k in kind_idx]
+        else:
+            inten = (self.carbon_signal.intensities(table.region, now)
+                     if self.carbon_signal is not None else None)
+            mats = decision_matrix_batch(pods, table, carbon_intensity=inten)
+        valid = table.fits(np.asarray([p.cpu for p in pods])[:, None],
+                           np.asarray([p.mem for p in pods])[:, None])
+        if exclude is not None:
+            valid = valid & ~np.asarray(exclude, dtype=bool)
+        w = self.weights(table)
+        for i, (pod, idx) in enumerate(zip(pods, assignments)):
+            exp = topsis.explain_np(mats[i], w, self._benefit, valid[i],
+                                    criteria_names=names)
+            exp.update(pod=pod.uid, t=now,
+                       node=table.names[idx] if idx is not None else None,
+                       runner_up_node=(table.names[exp["runner_up"]]
+                                       if exp["runner_up"] is not None
+                                       else None))
+            self.explanations.append(exp)
+
     def select_many(self, pods: Sequence[Pod], nodes, now: float = 0.0,
                     blocked: "Sequence[int | None] | None" = None,
-                    exclude=None):
+                    exclude=None, explain: bool = False):
         """Place a queue: returns (assignments, diagnostics) where
         ``assignments[i]`` is the node index for ``pods[i]`` or None.
         ``blocked[i]`` optionally names one node index ``pods[i]`` must not
@@ -507,34 +588,47 @@ class BatchScheduler:
         the greedy ledger walk, so a blocked top choice falls through to
         the next-ranked node without phantom capacity charges. ``exclude``
         ((N,) or (P, N) bool) hard-masks nodes out of the scoring validity
-        instead (sleeping / deadline-late nodes, see :meth:`score_queue`)."""
-        t0 = time.perf_counter()
-        table = _as_table(nodes)
-        if not len(pods):
-            return [], {"closeness": np.zeros((0, len(table))),
-                        "scheduling_time_s": 0.0, "per_pod_time_s": 0.0}
-        cc = self.score_queue(pods, table, now=now, exclude=exclude)
-        order = np.argsort(-cc, kind="stable", axis=-1)
-        free_cpu = table.free_cpu.copy()
-        free_mem = table.free_mem.copy()
-        assignments: list[int | None] = []
-        for i, pod in enumerate(pods):
-            forbid = blocked[i] if blocked is not None else None
-            chosen = None
-            for j in order[i]:
-                if np.isneginf(cc[i, j]):
-                    break               # rest of the ranking is infeasible
-                if forbid is not None and int(j) == forbid:
-                    continue
-                if free_cpu[j] >= pod.cpu - 1e-9 \
-                        and free_mem[j] >= pod.mem - 1e-9:
-                    chosen = int(j)
-                    free_cpu[j] -= pod.cpu
-                    free_mem[j] -= pod.mem
-                    break
-            assignments.append(chosen)
-        dt = time.perf_counter() - t0
+        instead (sleeping / deadline-late nodes, see :meth:`score_queue`).
+        ``explain=True`` (numpy backend only, like
+        :meth:`GreenPodScheduler.select`) appends a per-criterion
+        attribution per placed pod to ``self.explanations``."""
+        explain = explain or self.explain
+        if explain and self.backend != "numpy":
+            raise ValueError(
+                f"explain=True needs backend='numpy', not "
+                f"{self.backend!r}: only the numpy path exposes the "
+                f"weighted separation terms the attribution decomposes")
+        with telemetry.active().span("scheduler_batch",
+                                     scheduler=self.name,
+                                     backend=self.backend) as sp:
+            table = _as_table(nodes)
+            if not len(pods):
+                return [], {"closeness": np.zeros((0, len(table))),
+                            "scheduling_time_s": 0.0, "per_pod_time_s": 0.0}
+            cc = self.score_queue(pods, table, now=now, exclude=exclude)
+            order = np.argsort(-cc, kind="stable", axis=-1)
+            free_cpu = table.free_cpu.copy()
+            free_mem = table.free_mem.copy()
+            assignments: list[int | None] = []
+            for i, pod in enumerate(pods):
+                forbid = blocked[i] if blocked is not None else None
+                chosen = None
+                for j in order[i]:
+                    if np.isneginf(cc[i, j]):
+                        break           # rest of the ranking is infeasible
+                    if forbid is not None and int(j) == forbid:
+                        continue
+                    if free_cpu[j] >= pod.cpu - 1e-9 \
+                            and free_mem[j] >= pod.mem - 1e-9:
+                        chosen = int(j)
+                        free_cpu[j] -= pod.cpu
+                        free_mem[j] -= pod.mem
+                        break
+                assignments.append(chosen)
+        dt = sp.duration_s
         per_pod = dt / len(pods)
+        if explain:
+            self._explain_batch(pods, table, now, exclude, assignments)
         for pod, idx in zip(pods, assignments):
             self.decision_log.append(
                 {"pod": pod.uid,
@@ -568,20 +662,24 @@ class DefaultK8sScheduler:
         ``now`` is accepted for engine-call symmetry and ignored — the
         baseline is carbon-blind. ``exclude`` masks engine-forbidden nodes
         (sleeping capacity) exactly like capacity infeasibility."""
-        t0 = time.perf_counter()
-        table = _as_table(nodes)
-        fits = table.fits(pod.cpu, pod.mem)
-        if exclude is not None:
-            fits = fits & ~np.asarray(exclude, dtype=bool)
-        if not fits.any():
-            return None, {"reason": "unschedulable"}
-        cpu_frac = (table.reserved_cpu + table.used_cpu + pod.cpu) / table.vcpus
-        mem_frac = (table.reserved_mem + table.used_mem + pod.mem) / table.mem_gb
-        least = 100.0 * ((1.0 - cpu_frac) + (1.0 - mem_frac)) / 2.0
-        balanced = 100.0 * (1.0 - np.abs(cpu_frac - mem_frac))
-        scores = np.where(fits, (least + balanced) / 2.0, -1.0)
-        best = int(np.argmax(scores))
-        dt = time.perf_counter() - t0
+        with telemetry.active().span("scheduler_decision",
+                                     scheduler=self.name,
+                                     backend="numpy") as sp:
+            table = _as_table(nodes)
+            fits = table.fits(pod.cpu, pod.mem)
+            if exclude is not None:
+                fits = fits & ~np.asarray(exclude, dtype=bool)
+            if not fits.any():
+                return None, {"reason": "unschedulable"}
+            cpu_frac = (table.reserved_cpu + table.used_cpu
+                        + pod.cpu) / table.vcpus
+            mem_frac = (table.reserved_mem + table.used_mem
+                        + pod.mem) / table.mem_gb
+            least = 100.0 * ((1.0 - cpu_frac) + (1.0 - mem_frac)) / 2.0
+            balanced = 100.0 * (1.0 - np.abs(cpu_frac - mem_frac))
+            scores = np.where(fits, (least + balanced) / 2.0, -1.0)
+            best = int(np.argmax(scores))
+        dt = sp.duration_s
         self.decision_log.append({"pod": pod.uid, "node": table.names[best],
                                   "time_s": dt})
         return best, {"scores": scores, "scheduling_time_s": dt}

@@ -130,11 +130,11 @@ def batched_closeness_np(mats, ws, benefit, valids=None) -> "np.ndarray":
     return np.stack(out, axis=0)
 
 
-def closeness_np(matrix, weights, benefit, valid=None):
-    """NumPy mirror of :func:`closeness` for latency-critical single
-    decisions on CPU (the per-pod scheduler hot path, where jnp dispatch
-    overhead dominates the 4-node matrices of the paper's cluster).
-    Semantics are identical; tests assert equivalence."""
+def _weighted_and_ideals_np(matrix, weights, benefit, valid):
+    """The numpy pipeline up to the distance step: weighted normalized
+    matrix plus the (masked) ideal / anti-ideal rows — shared verbatim by
+    :func:`closeness_np` and :func:`explain_np` so the explanation is an
+    exact decomposition of the scores the scheduler acted on."""
     import numpy as np
     matrix = np.asarray(matrix, dtype=np.float64)
     weights = np.asarray(weights, dtype=np.float64)
@@ -153,6 +153,17 @@ def closeness_np(matrix, weights, benefit, valid=None):
     else:
         a_pos = np.where(benefit, v.max(axis=0), v.min(axis=0))
         a_neg = np.where(benefit, v.min(axis=0), v.max(axis=0))
+    return v, a_pos, a_neg, valid
+
+
+def closeness_np(matrix, weights, benefit, valid=None):
+    """NumPy mirror of :func:`closeness` for latency-critical single
+    decisions on CPU (the per-pod scheduler hot path, where jnp dispatch
+    overhead dominates the 4-node matrices of the paper's cluster).
+    Semantics are identical; tests assert equivalence."""
+    import numpy as np
+    v, a_pos, a_neg, valid = _weighted_and_ideals_np(matrix, weights,
+                                                     benefit, valid)
     # inf/inf -> nan is expected when NO row is valid (both ideals are
     # +-inf); the nan closeness is masked to -inf below
     with np.errstate(invalid="ignore"):
@@ -163,3 +174,73 @@ def closeness_np(matrix, weights, benefit, valid=None):
     if valid is not None:
         cc = np.where(valid, cc, -np.inf)
     return TopsisResult(cc, np.argsort(-cc), d_pos, d_neg, v)
+
+
+def _cc_row_np(row, a_pos, a_neg):
+    """Closeness of one weighted-normalized row against fixed ideal points
+    (same arithmetic and degenerate rule as :func:`closeness_np`)."""
+    import numpy as np
+    d_pos = float(np.sqrt(((row - a_pos) ** 2).sum()))
+    d_neg = float(np.sqrt(((row - a_neg) ** 2).sum()))
+    if d_pos + d_neg <= _EPS:
+        return 0.5
+    return d_neg / max(d_pos + d_neg, _EPS)
+
+
+def explain_np(matrix, weights, benefit, valid=None, criteria_names=None):
+    """Per-criterion attribution of the winner-vs-runner-up closeness gap.
+
+    Telescoping decomposition: starting from the runner-up's weighted
+    normalized row, swap one criterion at a time to the winner's value
+    (criteria order) and recompute closeness against the *fixed* ideal
+    points of the actual decision. Each swap's closeness delta is that
+    criterion's contribution; the deltas sum exactly (up to float
+    round-off) to ``cc_winner - cc_runner_up``, so "why did TOPSIS pick
+    this node" reads off as C signed numbers. Numpy path only — the
+    jax/pallas engines return closeness without the weighted
+    intermediates.
+
+    Returns a dict: winner / runner-up indices and closeness, the gap,
+    and one ``{criterion, delta_cc, winner_value, runner_up_value}``
+    entry per criterion (raw decision-matrix values, not the normalized
+    ones). With fewer than two feasible alternatives ``runner_up`` is
+    None and ``contributions`` is empty.
+    """
+    import numpy as np
+    matrix = np.asarray(matrix, dtype=np.float64)
+    res = closeness_np(matrix, weights, benefit, valid)
+    v, a_pos, a_neg, _ = _weighted_and_ideals_np(matrix, weights, benefit,
+                                                 valid)
+    n_c = matrix.shape[-1]
+    if criteria_names is None:
+        criteria_names = [f"criterion_{j}" for j in range(n_c)]
+    # first max on both picks — the scheduler's argmax tie-break, which
+    # res.ranking (unstable argsort) does not guarantee on exact ties
+    winner = int(np.argmax(res.closeness))
+    feasible = int(np.isfinite(res.closeness).sum())
+    if feasible < 2:
+        return {"winner": winner, "runner_up": None,
+                "closeness_winner": float(res.closeness[winner]),
+                "closeness_runner_up": None, "gap": None,
+                "contributions": []}
+    rest = res.closeness.copy()
+    rest[winner] = -np.inf
+    runner = int(np.argmax(rest))
+    row = v[runner].copy()
+    cc_prev = _cc_row_np(row, a_pos, a_neg)
+    contributions = []
+    for j in range(n_c):
+        row[j] = v[winner, j]
+        cc_j = _cc_row_np(row, a_pos, a_neg)
+        contributions.append({
+            "criterion": str(criteria_names[j]),
+            "delta_cc": cc_j - cc_prev,
+            "winner_value": float(matrix[winner, j]),
+            "runner_up_value": float(matrix[runner, j]),
+        })
+        cc_prev = cc_j
+    return {"winner": winner, "runner_up": runner,
+            "closeness_winner": float(res.closeness[winner]),
+            "closeness_runner_up": float(res.closeness[runner]),
+            "gap": float(res.closeness[winner] - res.closeness[runner]),
+            "contributions": contributions}

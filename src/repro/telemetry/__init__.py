@@ -1,0 +1,11 @@
+"""Telemetry exporters for the flight recorder.
+
+The registry itself lives in ``repro.core.telemetry`` (a leaf module the
+instrumented hot paths import); this package holds the operator-facing
+output formats — JSON snapshot, Prometheus text exposition, and the
+Chrome trace-event / Perfetto export of a simulation timeline
+(``repro.telemetry.export``).
+"""
+from repro.telemetry.export import (json_snapshot, parse_prometheus,  # noqa: F401
+                                    perfetto_trace, prometheus_text,
+                                    validate_trace, write_perfetto)

@@ -1,0 +1,337 @@
+"""Flight-recorder tests: the pure-observer invariant, the registry
+primitives, the exporters, and TOPSIS decision explainability.
+
+The load-bearing half is the golden matrix: every recorded scenario cell
+(tests/golden_engine_scenarios.json, tests/golden_table6.json) must
+reproduce **bitwise with telemetry enabled** — recording is write-only
+from the simulation's point of view, so turning the flight recorder on
+can never change a placement, an energy total, or an event counter.
+"""
+import json
+import math
+import os
+
+import numpy as np
+import pytest
+
+from engine_golden_spec import SCENARIOS, arrivals, fleet, run_cell
+from repro.core import telemetry
+from repro.core.telemetry import (DEFAULT_LATENCY_BUCKETS, Histogram,
+                                  Telemetry, log_buckets)
+from repro.core.topsis import closeness_np, explain_np
+from repro.telemetry.export import (json_snapshot, parse_prometheus,
+                                   perfetto_trace, prometheus_text,
+                                   validate_trace, write_perfetto)
+from repro.cluster.simulator import run_scenario, table6
+
+GOLDEN = json.load(open(os.path.join(os.path.dirname(__file__),
+                                     "golden_engine_scenarios.json")))
+GOLDEN_T6 = json.load(open(os.path.join(os.path.dirname(__file__),
+                                        "golden_table6.json")))
+
+
+@pytest.fixture(autouse=True)
+def _clean_registry():
+    """Never leak an active registry into (or out of) a test."""
+    telemetry.disable()
+    yield
+    telemetry.disable()
+
+
+# --- the pure-observer invariant: golden runs, recording on ------------------
+@pytest.mark.parametrize("backend", ["numpy", "jax", "pallas"])
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_golden_matrix_bitwise_with_telemetry(name, backend):
+    """Every (policy combination x backend) golden cell reproduces the
+    recorded output exactly with the flight recorder on — and the
+    recorder demonstrably recorded (so this isn't vacuously passing)."""
+    with telemetry.enabled() as tel:
+        res = run_cell(name, backend)
+    g = GOLDEN["runs"][f"{name}/{backend}"]
+    assert [r.node for r in res.records] == g["nodes"]
+    assert [r.pod.uid for r in res.records] == g["uids"]
+    assert [r.start_s for r in res.records] == g["start_s"]
+    assert [r.runtime_s for r in res.records] == g["runtime_s"]
+    assert res.energy_kj("topsis") == g["energy_topsis_kj"]
+    assert res.energy_kj("default") == g["energy_default_kj"]
+    assert res.unschedulable == g["unschedulable"]
+    assert res.preemptions == g["preemptions"]
+    assert res.migrations == g["migrations"]
+    assert res.wakes == g["wakes"]
+    assert res.sleeps == g["sleeps"]
+    if SCENARIOS[name]["carbon"]:
+        assert res.total_carbon_g("topsis") == g["carbon_topsis_g"]
+        assert (res.mean_deferral_latency_s("topsis")
+                == g["mean_deferral_latency_s"])
+    if SCENARIOS[name]["autoscale"]:
+        assert res.fleet_idle_energy_kj() == g["fleet_idle_energy_kj"]
+        assert res.state_energy_kj() == g["state_energy_kj"]
+    # the recorder saw the run: kernel counters, round spans, decision
+    # latency histograms, energy rollups
+    assert tel.counter_value("engine_events", kind="arrival") > 0
+    assert tel.counter_value("engine_events", kind="completion") > 0
+    assert any(s["name"] == "engine_round" for s in tel.spans)
+    assert any(h.name in ("scheduler_decision_seconds",
+                          "scheduler_batch_seconds") and h.count > 0
+               for h in tel.histograms.values())
+    assert any(g_.name == "fleet_energy_kj" for g_ in tel.gauges.values())
+
+
+def test_golden_table6_bitwise_with_telemetry():
+    """The paper-mode factorial (Table VI) reproduces its golden with the
+    flight recorder on."""
+    with telemetry.enabled():
+        t6 = table6()
+    for level, d in GOLDEN_T6["table6"].items():
+        for scheme, row in d.items():
+            for key, want in row.items():
+                got = t6[level][scheme][key]
+                assert abs(got - want) < 1e-9, (level, scheme, key)
+
+
+def test_telemetry_scoped_enable_restores_null():
+    with telemetry.enabled() as tel:
+        assert telemetry.active() is tel
+    assert telemetry.active() is telemetry.NULL
+    assert not telemetry.active().enabled
+
+
+# --- histogram bucket math ---------------------------------------------------
+def test_log_buckets_exact_powers():
+    edges = log_buckets(1e-6, 10.0, per_decade=4)
+    assert edges == tuple(10.0 ** (k / 4) for k in range(-24, 5))
+    assert DEFAULT_LATENCY_BUCKETS == edges
+    assert edges[0] == 1e-6 and edges[-1] == 10.0
+    # two registries configured alike agree bitwise on boundaries
+    assert log_buckets(1e-6, 10.0, per_decade=4) == edges
+    with pytest.raises(ValueError):
+        log_buckets(1.0, 1.0)
+    with pytest.raises(ValueError):
+        log_buckets(1e-3, 1.0, per_decade=0)
+
+
+def test_histogram_le_semantics():
+    h = Histogram("h", edges=(1.0, 10.0, 100.0))
+    for v in (0.5, 1.0, 1.0000001, 10.0, 150.0):
+        h.observe(v)
+    # le semantics: a value equal to an edge lands in that bucket
+    assert h.counts == [2, 2, 0, 1]
+    assert h.cumulative() == [2, 4, 4, 5]
+    assert h.count == 5
+    assert h.sum == pytest.approx(0.5 + 1.0 + 1.0000001 + 10.0 + 150.0)
+    assert h.min == 0.5 and h.max == 150.0
+    snap = h.snapshot()
+    assert snap["counts"] == [2, 2, 0, 1] and snap["count"] == 5
+    with pytest.raises(ValueError):
+        Histogram("bad", edges=(1.0, 1.0, 2.0))
+    with pytest.raises(ValueError):
+        Histogram("bad", edges=(2.0, 1.0))
+
+
+def test_registry_counters_gauges_spans():
+    tel = Telemetry()
+    tel.inc("c", kind="a")
+    tel.inc("c", value=2.0, kind="a")
+    tel.inc("c", kind="b")
+    assert tel.counter_value("c", kind="a") == 3.0
+    assert tel.counter_value("c", kind="b") == 1.0
+    assert tel.counter_value("missing") == 0.0
+    tel.set_gauge("g", 5.0)
+    tel.set_gauge("g", 2.0)
+    g = tel.gauges[("g", ())]
+    assert (g.value, g.min, g.max, g.samples) == (2.0, 2.0, 5.0, 2)
+    with tel.span("outer") as outer:
+        with tel.span("inner") as inner:
+            pass
+    assert outer.duration_s >= inner.duration_s >= 0.0
+    assert [s["name"] for s in tel.spans] == ["inner", "outer"]
+    assert [s["depth"] for s in tel.spans] == [1, 0]
+    assert tel.histogram("outer_seconds").count == 1
+    snap = json_snapshot(tel, include_spans=True)
+    assert snap["spans"] == 2 and len(snap["span_log"]) == 2
+    assert {c["name"] for c in snap["counters"]} == {"c"}
+
+
+def test_null_telemetry_span_still_times():
+    """The disabled default records nothing, but its spans still time —
+    PodRecord.scheduling_time_s depends on this single code path."""
+    null = telemetry.NULL
+    with null.span("x") as sp:
+        acc = sum(range(1000))
+    assert acc == 499500
+    assert sp.duration_s > 0.0
+
+
+# --- Prometheus exposition round-trip ----------------------------------------
+def test_prometheus_round_trip():
+    tel = Telemetry(latency_buckets=(1e-3, 1e-2, 1e-1))
+    tel.inc("engine_events", value=7.0, kind="arrival")
+    tel.inc("engine_events", value=3.0, kind="completion")
+    tel.set_gauge("engine_pending_depth", 12.0)
+    for v in (5e-4, 5e-3, 5e-2, 5.0):
+        tel.observe("lat_seconds", v, backend="numpy")
+    text = prometheus_text(tel)
+    # one TYPE line per metric name, declared before its samples
+    assert text.count("# TYPE engine_events counter") == 1
+    assert "# TYPE engine_pending_depth gauge" in text
+    assert "# TYPE lat_seconds histogram" in text
+    parsed = parse_prometheus(text)
+    assert parsed[("engine_events", (("kind", "arrival"),))] == 7.0
+    assert parsed[("engine_events", (("kind", "completion"),))] == 3.0
+    assert parsed[("engine_pending_depth", ())] == 12.0
+    h = tel.histogram("lat_seconds", backend="numpy")
+    cum = h.cumulative()
+    for edge, want in zip(h.edges, cum):
+        key = ("lat_seconds_bucket",
+               tuple(sorted({"backend": "numpy", "le": repr(edge)}.items())))
+        assert parsed[key] == want
+    inf_key = ("lat_seconds_bucket",
+               tuple(sorted({"backend": "numpy", "le": "+Inf"}.items())))
+    assert parsed[inf_key] == cum[-1] == 4
+    assert parsed[("lat_seconds_sum", (("backend", "numpy"),))] == h.sum
+    assert parsed[("lat_seconds_count", (("backend", "numpy"),))] == 4
+
+
+def test_prometheus_label_escaping_round_trips():
+    tel = Telemetry()
+    nasty = 'a"b\\c\nd'
+    tel.inc("c", value=1.5, node=nasty)
+    parsed = parse_prometheus(prometheus_text(tel))
+    assert parsed[("c", (("node", nasty),))] == 1.5
+
+
+def test_prometheus_rejects_bad_metric_name():
+    tel = Telemetry()
+    tel.inc("bad-name")
+    with pytest.raises(ValueError):
+        prometheus_text(tel)
+
+
+# --- Perfetto / Chrome trace export ------------------------------------------
+def test_perfetto_trace_valid_and_complete(tmp_path):
+    res = run_cell("carbon_autoscale", "numpy")
+    trace = perfetto_trace(res, trace_name="golden carbon_autoscale")
+    stats = validate_trace(trace)
+    assert stats["spans"] > 0          # task + power-state intervals
+    assert stats["instants"] > 0       # policy events + wake surges
+    names = {ev["args"]["name"] for ev in trace["traceEvents"]
+             if ev["ph"] == "M" and ev["name"] == "process_name"}
+    assert "policies" in names
+    assert any(n.startswith("node ") for n in names)
+    cats = {ev.get("cat") for ev in trace["traceEvents"] if ev["ph"] != "M"}
+    assert {"task", "state", "event"} <= cats
+    # every scheduled record shows up as exactly one task span
+    task_b = [ev for ev in trace["traceEvents"]
+              if ev["ph"] == "B" and ev.get("cat") == "task"]
+    assert len(task_b) == sum(1 for r in res.records if r.runtime_s > 0.0)
+    path = write_perfetto(res, tmp_path / "run.trace.json")
+    reloaded = json.load(open(path))
+    assert validate_trace(reloaded) == stats
+
+
+def test_validate_trace_catches_violations():
+    ok = [{"ph": "B", "ts": 0.0, "pid": 1, "tid": 1, "name": "x"},
+          {"ph": "E", "ts": 2.0, "pid": 1, "tid": 1, "name": "x"}]
+    assert validate_trace(ok)["spans"] == 1
+    with pytest.raises(ValueError, match="unknown phase"):
+        validate_trace([{"ph": "Q", "ts": 0.0}])
+    with pytest.raises(ValueError, match="not sorted"):
+        validate_trace([{"ph": "i", "ts": 5.0, "pid": 1, "tid": 1},
+                        {"ph": "i", "ts": 1.0, "pid": 1, "tid": 1}])
+    with pytest.raises(ValueError, match="no open B"):
+        validate_trace([{"ph": "E", "ts": 0.0, "pid": 1, "tid": 1,
+                         "name": "x"}])
+    with pytest.raises(ValueError, match="does not match"):
+        validate_trace([{"ph": "B", "ts": 0.0, "pid": 1, "tid": 1,
+                         "name": "x"},
+                        {"ph": "E", "ts": 1.0, "pid": 1, "tid": 1,
+                         "name": "y"}])
+    with pytest.raises(ValueError, match="unclosed"):
+        validate_trace([{"ph": "B", "ts": 0.0, "pid": 1, "tid": 1,
+                         "name": "x"}])
+    with pytest.raises(ValueError, match="bad ts"):
+        validate_trace([{"ph": "i", "ts": -1.0, "pid": 1, "tid": 1}])
+
+
+# --- TOPSIS decision explainability ------------------------------------------
+def _toy_decision():
+    rng = np.random.default_rng(11)
+    matrix = rng.uniform(0.1, 1.0, size=(6, 4))
+    weights = np.array([0.4, 0.3, 0.2, 0.1])
+    benefit = np.array([True, False, True, False])
+    return matrix, weights, benefit
+
+
+def test_explain_np_contributions_sum_to_gap():
+    matrix, weights, benefit = _toy_decision()
+    exp = explain_np(matrix, weights, benefit,
+                     criteria_names=["cpu", "mem", "eff", "carbon"])
+    res = closeness_np(matrix, weights, benefit)
+    assert exp["winner"] == int(np.argmax(res.closeness))
+    assert exp["runner_up"] != exp["winner"]
+    assert exp["gap"] == pytest.approx(
+        exp["closeness_winner"] - exp["closeness_runner_up"], abs=0.0)
+    total = sum(c["delta_cc"] for c in exp["contributions"])
+    assert total == pytest.approx(exp["gap"], abs=1e-12)
+    assert [c["criterion"] for c in exp["contributions"]] == [
+        "cpu", "mem", "eff", "carbon"]
+    for j, c in enumerate(exp["contributions"]):
+        assert c["winner_value"] == matrix[exp["winner"], j]
+        assert c["runner_up_value"] == matrix[exp["runner_up"], j]
+
+
+def test_explain_np_single_feasible_row():
+    matrix, weights, benefit = _toy_decision()
+    valid = np.zeros(matrix.shape[0], dtype=bool)
+    valid[2] = True
+    exp = explain_np(matrix, weights, benefit, valid)
+    assert exp["winner"] == 2
+    assert exp["runner_up"] is None and exp["contributions"] == []
+
+
+def test_run_scenario_explain_records_attributions():
+    res = run_scenario(arrivals(False), "energy_centric",
+                       cluster_factory=fleet(), batch=True,
+                       batch_backend="numpy", explain=True)
+    assert res.explanations
+    for exp in res.explanations:
+        assert exp["node"] is not None
+        assert exp["pod"]
+        if exp["runner_up"] is not None:
+            total = sum(c["delta_cc"] for c in exp["contributions"])
+            assert total == pytest.approx(exp["gap"], abs=1e-9)
+    assert "explanations" in res.summary()
+
+
+def test_explain_does_not_change_placements():
+    plain = run_scenario(arrivals(False), "energy_centric",
+                         cluster_factory=fleet(), batch=True,
+                         batch_backend="numpy")
+    explained = run_scenario(arrivals(False), "energy_centric",
+                             cluster_factory=fleet(), batch=True,
+                             batch_backend="numpy", explain=True)
+    assert ([r.node for r in plain.records]
+            == [r.node for r in explained.records])
+    assert plain.energy_kj("topsis") == explained.energy_kj("topsis")
+
+
+@pytest.mark.parametrize("backend", ["jax", "pallas"])
+def test_explain_rejects_accelerated_backends(backend):
+    with pytest.raises(ValueError, match="numpy"):
+        run_scenario(arrivals(False), "energy_centric",
+                     cluster_factory=fleet(), batch=True,
+                     batch_backend=backend, explain=True)
+
+
+# --- benchmark provenance ----------------------------------------------------
+def test_write_report_stamps_provenance():
+    from benchmarks.common import write_report
+    rep = write_report({"bench": "x", "results": []}, out=None)
+    prov = rep["provenance"]
+    for key in ("platform", "python", "git_sha", "utc_timestamp",
+                "jax_version"):
+        assert key in prov
+    assert prov["python"].count(".") == 2
+    # an explicit provenance block is preserved, not overwritten
+    rep2 = write_report({"provenance": {"pinned": True}}, out=None)
+    assert rep2["provenance"] == {"pinned": True}
