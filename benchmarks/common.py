@@ -13,9 +13,15 @@ import argparse
 import datetime
 import itertools
 import json
+import os
 import platform
 import subprocess
 from typing import Iterable, Iterator, Sequence
+
+# Append-only JSONL trajectory of recorded sweeps and check verdicts —
+# one line per event, so the bench history is a series, not a snapshot.
+HISTORY_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "history")
 
 # The batched backends every sweep defaults to; pallas is opt-in
 # (interpret mode is slow on CPU).
@@ -126,13 +132,24 @@ def provenance() -> dict:
     return prov
 
 
-def write_report(report: dict, out: str | None) -> dict:
+def write_report(report: dict, out: str | None,
+                 history: bool = True) -> dict:
     """Emit a sweep's JSON report with a :func:`provenance` block stamped
     in (no-op when ``out`` is falsy; an explicit block in ``report`` is
-    kept)."""
+    kept), and append the run to the sweep's ``benchmarks/history/``
+    JSONL so successive recordings form a trajectory."""
     report.setdefault("provenance", provenance())
     if out:
         with open(out, "w") as f:
             json.dump(report, f, indent=1)
         print(f"wrote {out}")
+        if history:
+            from repro.telemetry.baseline import append_history
+            bench = report.get("bench") or os.path.basename(out)
+            append_history(
+                {"kind": "record", "bench": bench,
+                 "provenance": report.get("provenance"),
+                 "config": report.get("config"),
+                 "results": report.get("results")},
+                os.path.join(HISTORY_DIR, f"{bench}.jsonl"))
     return report

@@ -2,19 +2,30 @@
 report (assignment §Roofline, from the dry-run artifacts if present),
 plus an aggregation pass that folds every recorded ``BENCH_*.json``
 (scheduling / scenarios / carbon / autoscale) into one summary
-(``BENCH_summary.json``).
+(``BENCH_summary.json``), and a cross-run regression gate.
 
-Usage: PYTHONPATH=src python -m benchmarks.run
+Usage:
+    PYTHONPATH=src python -m benchmarks.run            # run benchmarks
+    PYTHONPATH=src python -m benchmarks.run --check    # regression gate
+
+``--check`` diffs each recorded BENCH_*.json against its committed
+baseline under ``benchmarks/baselines/`` (see
+``repro.telemetry.baseline``) and exits nonzero on any regression.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
+import sys
 import time
 
 # The recorded sweep files the aggregation pass knows how to headline.
 BENCH_FILES = ("BENCH_scheduling.json", "BENCH_scenarios.json",
                "BENCH_carbon.json", "BENCH_autoscale.json")
+
+BASELINE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "baselines")
 
 
 def _headline(name: str, data: dict) -> dict:
@@ -47,6 +58,29 @@ def _headline(name: str, data: dict) -> dict:
         if red:
             out["idle_reduction_pct_range"] = [min(red), max(red)]
     return out
+
+
+def _provenance_warnings(summary: dict) -> list[str]:
+    """Mismatched environment fingerprints across the aggregated sweeps:
+    different git SHAs or pallas interpret-mode flags mean the summary
+    mixes runs that are not comparable as one sweep."""
+    provs = {name: head["provenance"] for name, head in summary.items()
+             if isinstance(head, dict)
+             and isinstance(head.get("provenance"), dict)}
+    warnings: list[str] = []
+    for field, what in (("git_sha", "git SHAs"),
+                        ("pallas_interpret", "pallas interpret-mode "
+                                             "flags")):
+        values = {name: p[field] for name, p in provs.items()
+                  if field in p and p[field] is not None}
+        if len(set(values.values())) > 1:
+            detail = ", ".join(f"{name}={v}"
+                               for name, v in sorted(values.items()))
+            warnings.append(
+                f"aggregated sweeps carry mismatched {what} ({detail}) "
+                f"— the summary mixes runs from different "
+                f"{'commits' if field == 'git_sha' else 'pallas modes'}")
+    return warnings
 
 
 def aggregate(out: str | None = "BENCH_summary.json") -> dict:
@@ -86,6 +120,13 @@ def aggregate(out: str | None = "BENCH_summary.json") -> dict:
     if not summary:
         print("no BENCH_*.json recorded yet; run the sweep benchmarks first")
         return summary
+    # a summary stitched from sweeps recorded at different commits or
+    # pallas modes is not one coherent run — say so, loudly
+    warnings = _provenance_warnings(summary)
+    for w in warnings:
+        print(f"warning: {w}")
+    if warnings:
+        summary["provenance_warnings"] = warnings
     print(f"{'sweep':28s} headline")
     for name, head in summary.items():
         extras = {k: v for k, v in head.items()
@@ -99,6 +140,55 @@ def aggregate(out: str | None = "BENCH_summary.json") -> dict:
             json.dump(summary, f, indent=1)
         print(f"wrote {out}")
     return summary
+
+
+def check(files=BENCH_FILES, baseline_dir: str = BASELINE_DIR,
+          verbose: bool = False) -> int:
+    """Regression gate: diff each fresh BENCH_*.json against its
+    committed baseline; returns the exit code (1 iff any gated metric
+    regressed). Missing current files or baselines are warnings, not
+    failures — a sweep that was never run can't regress."""
+    from repro.telemetry.baseline import (append_history, compare_reports,
+                                          format_verdict)
+    from benchmarks.common import HISTORY_DIR, provenance
+
+    exit_code = 0
+    checked = 0
+    for name in files:
+        base_path = os.path.join(baseline_dir, name)
+        if not os.path.exists(name):
+            print(f"warning: {name} not recorded — run its sweep before "
+                  f"checking (skipping)")
+            continue
+        if not os.path.exists(base_path):
+            print(f"warning: no committed baseline at {base_path} "
+                  f"(skipping {name})")
+            continue
+        try:
+            with open(name) as f:
+                current = json.load(f)
+            with open(base_path) as f:
+                baseline = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"warning: could not read {name} or its baseline "
+                  f"({e}) — skipping")
+            continue
+        verdict = compare_reports(current, baseline)
+        print(format_verdict(verdict, verbose=verbose))
+        checked += 1
+        bench = verdict["bench"] or name
+        append_history(
+            {"kind": "check", "bench": bench,
+             "status": verdict["status"],
+             "regressions": verdict["regressions"],
+             "provenance": current.get("provenance") or provenance()},
+            os.path.join(HISTORY_DIR, f"{bench}.jsonl"))
+        if verdict["status"] == "regression":
+            exit_code = 1
+    if not checked:
+        print("nothing checked: no (recorded sweep, committed baseline) "
+              "pair found")
+    return exit_code
 
 
 def main() -> None:
@@ -150,4 +240,17 @@ def main() -> None:
 
 
 if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--check", action="store_true",
+                    help="diff recorded BENCH_*.json against the "
+                         "committed baselines and exit nonzero on "
+                         "regression (runs no benchmarks)")
+    ap.add_argument("--baseline-dir", default=BASELINE_DIR,
+                    help="baseline directory for --check")
+    ap.add_argument("--verbose", action="store_true",
+                    help="with --check, print ok rows too")
+    args = ap.parse_args()
+    if args.check:
+        sys.exit(check(baseline_dir=args.baseline_dir,
+                       verbose=args.verbose))
     main()

@@ -2,10 +2,12 @@
 
 Runs one small carbon+autoscale scenario with telemetry enabled, checks
 the pure-observer invariant against a recording-free run of the same
-scenario, and writes both exporter outputs — a Prometheus text snapshot
-and a Perfetto trace (validated against the trace-event schema) that CI
-uploads as an artifact, so every PR leaves an openable
-ui.perfetto.dev trace of the scheduling engine behind.
+scenario, asserts the sim-time metric timelines were captured, and writes
+the exporter outputs — a Prometheus text snapshot, a Perfetto trace with
+counter tracks (validated against the trace-event schema), and the
+self-contained HTML run report — that CI uploads as artifacts, so every
+PR leaves an openable ui.perfetto.dev trace and an operator report of
+the scheduling engine behind.
 
 Run: PYTHONPATH=src python scripts/telemetry_smoke.py [out_dir]
 """
@@ -22,6 +24,7 @@ from repro.core import telemetry                     # noqa: E402
 from repro.telemetry.export import (perfetto_trace,  # noqa: E402
                                     prometheus_text, validate_trace,
                                     write_perfetto)
+from repro.telemetry.report import write_html_report  # noqa: E402
 
 
 def main() -> None:
@@ -40,22 +43,36 @@ def main() -> None:
     # ...and the recorder demonstrably recorded
     assert tel.counter_value("engine_events", kind="arrival") > 0
     assert any(s["name"] == "engine_round" for s in tel.spans)
+    # ...including the sim-time timelines
+    names = tel.series_names()
+    for want in ("engine_pending_depth", "fleet_power_w",
+                 "fleet_energy_cum_kj", "scheduler_energy_cum_kj"):
+        assert want in names, f"timeline {want} missing"
+    assert all(len(s) > 0 for s in tel.timeseries.values())
 
     prom_path = os.path.join(out_dir, "telemetry_smoke.prom")
     with open(prom_path, "w") as f:
         f.write(prometheus_text(tel))
     print(f"wrote {prom_path} "
           f"({len(tel.counters)} counters, {len(tel.gauges)} gauges, "
-          f"{len(tel.histograms)} histograms, {len(tel.spans)} spans)")
+          f"{len(tel.histograms)} histograms, {len(tel.spans)} spans, "
+          f"{len(tel.timeseries)} series)")
 
-    trace = perfetto_trace(res, trace_name="telemetry smoke")
+    trace = perfetto_trace(res, trace_name="telemetry smoke", tel=tel)
     stats = validate_trace(trace)
+    assert stats["counters"] > 0, "no counter tracks in the trace"
     trace_path = write_perfetto(
         res, os.path.join(out_dir, "telemetry_smoke.trace.json"),
-        trace_name="telemetry smoke")
+        trace_name="telemetry smoke", tel=tel)
     print(f"wrote {trace_path} ({stats['spans']} spans, "
-          f"{stats['instants']} instants, {stats['tracks']} tracks) — "
+          f"{stats['instants']} instants, {stats['counters']} counter "
+          f"samples, {stats['tracks']} tracks) — "
           f"open at https://ui.perfetto.dev")
+
+    report_path = write_html_report(
+        os.path.join(out_dir, "telemetry_smoke.html"), tel=tel,
+        result=res, title="telemetry smoke run")
+    print(f"wrote {report_path} ({len(tel.timeseries)} charted series)")
 
 
 if __name__ == "__main__":

@@ -46,6 +46,7 @@ from typing import Callable, Sequence
 import numpy as np
 
 from repro.core import telemetry
+from repro.core.elastic import ASLEEP, NODE_WAKE_PROFILES
 from repro.core.energy import (NODE_ENERGY_PROFILES, PowerTimeline,
                                task_energy_joules)
 from repro.core.policy import ARRIVAL, COMPLETION, Event, SchedulingPolicy
@@ -309,6 +310,11 @@ class EventEngine:
         self.policies = tuple(policies)
         self.batch = batch
         self._events = sorted(arrivals.events(), key=lambda ev: ev[0])
+        # sim-time series accumulators (observer-only: live on the engine,
+        # never in SimState, and are touched only when telemetry is on)
+        self._series_prev: tuple[float, float, float] | None = None
+        self._series_energy_j = 0.0
+        self._series_carbon_g = 0.0
 
     # --- kernel services (used by policies) ----------------------------------
     def deadline(self, pod: Pod) -> float:
@@ -413,12 +419,74 @@ class EventEngine:
             self._commit(pod, idx, t, diag["per_pod_time_s"])
         return still
 
+    def _record_series(self, tel) -> None:
+        """Sample the sim-time metric timelines at the current clock
+        instant (called after each scheduling round when recording is on).
+
+        Strictly observer-side: reads sim state, writes telemetry. Every
+        recorded value is a simulation quantity — queue depths, the fleet's
+        instantaneous draw from the committed ledger, cumulative energy and
+        carbon integrated piecewise-constant between clock advances — so
+        the same scenario records bit-identical series on every backend.
+        The cumulative series are the sampled operator view; the exact
+        end-of-run totals stay on the :class:`PowerTimeline` ledger."""
+        st = self.state
+        t = st.t
+        # per-node instantaneous draw: dynamic power of started tasks plus
+        # the per-state baseline (busy-union idle rule for legacy nodes:
+        # an empty always-on node draws nothing in the ledger either)
+        power = [0.0] * len(st.nodes)
+        for rt in st.running:
+            seg = st.timeline.segments[rt.segment_index]
+            if seg.start_s <= t:
+                power[rt.node_index] += seg.dyn_power_w
+        awake = 0
+        for i, node in enumerate(st.nodes):
+            s = node.power_state
+            if s != ASLEEP:
+                awake += 1
+            if s is None:
+                if node.used_cpu > 0.0:
+                    power[i] += (NODE_ENERGY_PROFILES[node.node_class]
+                                 ["idle_power"])
+            elif s == ASLEEP:
+                power[i] += (NODE_WAKE_PROFILES[node.node_class]
+                             ["sleep_power_w"])
+            else:       # active / idle / waking all draw the idle baseline
+                power[i] += (NODE_ENERGY_PROFILES[node.node_class]
+                             ["idle_power"])
+        fleet_power = sum(power)
+        sig = st.timeline.carbon_signal
+        if sig is not None:
+            from repro.core.carbon import J_PER_KWH
+            carbon_rate = sum(
+                p * sig.intensity(st.timeline.region_of(node.name), t)
+                for p, node in zip(power, st.nodes) if p) / J_PER_KWH
+        else:
+            carbon_rate = 0.0
+        if self._series_prev is not None:
+            prev_t, prev_p, prev_r = self._series_prev
+            if t > prev_t:
+                self._series_energy_j += prev_p * (t - prev_t)
+                self._series_carbon_g += prev_r * (t - prev_t)
+        self._series_prev = (t, fleet_power, carbon_rate)
+        tel.record("engine_pending_depth", t, float(len(st.pending)))
+        tel.record("engine_running_tasks", t, float(len(st.running)))
+        tel.record("fleet_awake_nodes", t, float(awake))
+        tel.record("fleet_power_w", t, fleet_power)
+        tel.record("fleet_energy_cum_kj", t, self._series_energy_j / 1000.0)
+        if sig is not None:
+            tel.record("fleet_carbon_cum_g", t, self._series_carbon_g)
+
     # --- the event loop ------------------------------------------------------
     def run(self) -> SimResult:
         st = self.state
         policies = self.policies
         events = self._events
         tel = telemetry.active()
+        if tel.enabled:
+            # the sim clock restarts at zero: timelines describe this run
+            tel.clear_series()
         ei = 0
         while True:
             # ingest every burst due by the current clock
@@ -540,6 +608,8 @@ class EventEngine:
                         held_uids.add(p.uid)
                 for pol in policies:
                     pol.on_round_end(self, st.pending, held, t)
+            if tel.enabled:
+                self._record_series(tel)
             # advance the clock to the earliest candidate event:
             # completion, arrival burst, or a policy wake
             next_arrival = events[ei][0] if ei < len(events) else None
@@ -601,6 +671,7 @@ class EventEngine:
             # end-of-run rollups (observer-only; guarded so disabled runs
             # skip the ledger walk entirely)
             st.timeline.publish_telemetry(tel)
+            st.timeline.publish_series(tel)
             tel.set_gauge("engine_unschedulable", float(st.unschedulable))
         explanations: list | None = None
         for sched in st.schedulers.values():

@@ -333,6 +333,16 @@ class CarbonScheduling(SchedulingPolicy):
     def bind(self, sim) -> None:
         self.fleet_regions = sorted({n.region for n in sim.state.nodes})
 
+    def on_clock(self, sim, t: float) -> None:
+        tel = telemetry.active()
+        if tel.enabled:
+            # observer-only: the grid-intensity timeline each region saw,
+            # sampled at the clock instants the engine actually visited
+            for region in self.fleet_regions:
+                tel.record("carbon_intensity_g_per_kwh", t,
+                           self.policy.signal.intensity(region, t),
+                           region=region)
+
     def on_arrival(self, sim, pod, t: float) -> None:
         if pod.deferrable and not (math.isfinite(pod.deadline_s)
                                    and pod.deadline_s > 0.0):

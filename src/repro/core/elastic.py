@@ -528,6 +528,14 @@ class AutoscaleScheduling(SchedulingPolicy):
 
     def on_clock(self, sim, t: float) -> None:
         self.fleet.advance_to(t)
+        tel = telemetry.active()
+        if tel.enabled:
+            # observer-only: per-state node counts over sim time (states()
+            # is a read-only view, so recording can't perturb the run)
+            states = self.fleet.states(t)
+            for state in POWER_STATES:
+                tel.record("fleet_state_nodes", t,
+                           float(states.count(state)), state=state)
 
     def on_round_start(self, sim, t: float) -> None:
         if self.next_consolidate is None or t < self.next_consolidate:

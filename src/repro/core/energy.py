@@ -466,6 +466,58 @@ class PowerTimeline:
         tel.set_gauge("fleet_idle_energy_kj", self.fleet_idle_energy_kj())
         tel.set_gauge("fleet_energy_kj", self.fleet_energy_kj())
 
+    def publish_series(self, tel) -> None:
+        """Expose the ledgers as sim-time :class:`~repro.core.telemetry.
+        TimeSeries` on ``tel``: per-scheduler cumulative energy
+        (``scheduler_energy_cum_kj``), per-state fleet baseline power
+        (``state_power_w``), and — when a carbon signal is attached —
+        per-region cumulative carbon (``region_carbon_cum_g``). Like
+        :meth:`publish_telemetry` this is read-only over the ledgers and
+        deterministic: every sample is derived from committed segments, so
+        backends with bitwise-identical placements record identical series."""
+        import numpy as np
+        for sched in sorted({s.scheduler for s in self.segments}):
+            edges, joules = self.energy_series(sched)
+            for t, j in zip(edges.tolist(), joules.tolist()):
+                tel.record("scheduler_energy_cum_kj", t, j / 1000.0,
+                           scheduler=sched)
+        states = sorted({iv.state for iv in self.state_intervals})
+        for state in states:
+            ivs = [iv for iv in self.state_intervals if iv.state == state]
+            edges = np.unique(np.asarray(
+                [iv.start_s for iv in ivs] + [iv.end_s for iv in ivs]))
+            idx = {t: i for i, t in enumerate(edges.tolist())}
+            delta = np.zeros(len(edges))
+            for iv in ivs:
+                delta[idx[iv.start_s]] += iv.power_w
+                delta[idx[iv.end_s]] -= iv.power_w
+            watts = np.cumsum(delta)
+            for t, w in zip(edges.tolist(), watts.tolist()):
+                tel.record("state_power_w", t, w, state=state)
+        if self.carbon_signal is not None:
+            from repro.core.carbon import J_PER_KWH
+            sig = self.carbon_signal
+            by_region: dict[str, list[tuple[float, float, float, str]]] = {}
+            for piece in self._power_pieces(None):
+                by_region.setdefault(self.region_of(piece[3]),
+                                     []).append(piece)
+            for region in sorted(by_region):
+                pieces = by_region[region]
+                edges = np.unique(np.asarray(
+                    [lo for lo, _, _, _ in pieces]
+                    + [hi for _, hi, _, _ in pieces]))
+                delta = np.zeros(len(edges) - 1)
+                for lo, hi, p, _node in pieces:
+                    i0 = int(np.searchsorted(edges, lo))
+                    i1 = int(np.searchsorted(edges, hi))
+                    for k in range(i0, i1):
+                        delta[k] += p * sig.integral(region, edges[k],
+                                                     edges[k + 1])
+                grams = np.concatenate(
+                    [[0.0], np.cumsum(delta / J_PER_KWH)])
+                for t, g in zip(edges.tolist(), grams.tolist()):
+                    tel.record("region_carbon_cum_g", t, g, region=region)
+
 
 # --- TPU fleet (beyond-paper) ----------------------------------------------
 TPU_V5E_TDP_W = 250.0        # per-chip board power envelope

@@ -31,10 +31,22 @@ labels as keyword arguments)::
     tel = telemetry.enable()
     tel.inc("engine_events", kind="arrival")
     tel.set_gauge("engine_pending_depth", 12)
+    tel.record("engine_pending_depth", t_sim, 12)   # sim-time timeline
     with tel.span("scheduler_decision", backend="numpy") as sp:
         ...
     sp.duration_s            # wall seconds, also observed into the
                              # "scheduler_decision_seconds" histogram
+
+Timelines (:class:`TimeSeries`, via :meth:`Telemetry.record`) are keyed on
+the **simulation clock**, never wall time: the recorded values are sim
+quantities (queue depths, fleet power, cumulative energy), so the same
+scenario records bit-identical series on every backend, and recording one
+can never perturb the run (tests/test_timeline.py pins both). Memory is
+bounded per series by deterministic decimation (see :class:`TimeSeries`).
+Because the sim clock restarts at zero each run, timelines describe **one
+run**: the engine calls :meth:`Telemetry.clear_series` at run start, so a
+registry shared across runs (table6's factorial) keeps the latest run's
+series while counters / gauges / histograms keep aggregating.
 """
 from __future__ import annotations
 
@@ -43,8 +55,8 @@ import time
 from contextlib import contextmanager
 
 __all__ = [
-    "Telemetry", "NullTelemetry", "Histogram", "Span",
-    "log_buckets", "DEFAULT_LATENCY_BUCKETS",
+    "Telemetry", "NullTelemetry", "Histogram", "Span", "TimeSeries",
+    "log_buckets", "DEFAULT_LATENCY_BUCKETS", "DEFAULT_SERIES_MAX_POINTS",
     "active", "enable", "disable", "enabled", "NULL",
 ]
 
@@ -154,6 +166,80 @@ class Gauge:
                 "max": None if self.samples == 0 else self.max}
 
 
+# Default per-series point budget: plenty for an operator chart, small
+# enough that a registry full of series stays a few hundred KB.
+DEFAULT_SERIES_MAX_POINTS = 512
+
+
+class TimeSeries:
+    """A metric timeline keyed on the simulation clock.
+
+    ``record(t, value)`` appends one sample; repeated samples at the same
+    sim instant overwrite (rounds can repeat at one clock instant via the
+    backoff step — last write wins), and time must never run backwards.
+
+    Memory is bounded by **deterministic decimation**: whenever the stored
+    points exceed ``max_points``, every other interior point is dropped
+    (the first and the most recent point are always kept). The surviving
+    points are a function of the append sequence alone — no randomness, no
+    wall clock — so the same scenario decimates to the identical series on
+    every backend, and the series endpoints are always exact."""
+
+    __slots__ = ("name", "labels", "max_points", "samples", "_t", "_v")
+
+    def __init__(self, name: str, labels: dict | None = None,
+                 max_points: int = DEFAULT_SERIES_MAX_POINTS):
+        if max_points < 4:
+            raise ValueError(f"max_points must be >= 4, got {max_points}")
+        self.name = name
+        self.labels = dict(labels or {})
+        self.max_points = max_points
+        self.samples = 0            # total record() calls, pre-decimation
+        self._t: list[float] = []
+        self._v: list[float] = []
+
+    def __len__(self) -> int:
+        return len(self._t)
+
+    def record(self, t: float, value: float) -> None:
+        self.samples += 1
+        if self._t:
+            last = self._t[-1]
+            if t < last:
+                raise ValueError(
+                    f"series {self.name!r}: sim time ran backwards "
+                    f"({t} < {last})")
+            if t == last:
+                self._v[-1] = value
+                return
+        self._t.append(t)
+        self._v.append(value)
+        if len(self._t) > self.max_points:
+            # drop every other interior point; keep index 0 and the last
+            last_i = len(self._t) - 1
+            keep = list(range(0, last_i, 2))
+            if keep[-1] != last_i:
+                keep.append(last_i)
+            self._t = [self._t[i] for i in keep]
+            self._v = [self._v[i] for i in keep]
+
+    @property
+    def times(self) -> tuple[float, ...]:
+        return tuple(self._t)
+
+    @property
+    def values(self) -> tuple[float, ...]:
+        return tuple(self._v)
+
+    def points(self) -> list[tuple[float, float]]:
+        return list(zip(self._t, self._v))
+
+    def snapshot(self) -> dict:
+        return {"name": self.name, "labels": dict(self.labels),
+                "t": list(self._t), "values": list(self._v),
+                "samples": self.samples, "max_points": self.max_points}
+
+
 class Span:
     """One nestable timed span. A span *always* times (``duration_s`` is
     valid after the ``with`` block even under :class:`NullTelemetry`) —
@@ -197,6 +283,12 @@ class NullTelemetry:
     def observe(self, name: str, value: float, **labels) -> None:
         pass
 
+    def record(self, name: str, t: float, value: float, **labels) -> None:
+        pass
+
+    def clear_series(self) -> None:
+        pass
+
     def span(self, name: str, **labels) -> Span:
         return Span(self, name, labels)
 
@@ -215,11 +307,14 @@ class Telemetry(NullTelemetry):
     enabled = True
 
     def __init__(self,
-                 latency_buckets: tuple[float, ...] = DEFAULT_LATENCY_BUCKETS):
+                 latency_buckets: tuple[float, ...] = DEFAULT_LATENCY_BUCKETS,
+                 series_max_points: int = DEFAULT_SERIES_MAX_POINTS):
         self.latency_buckets = tuple(latency_buckets)
+        self.series_max_points = series_max_points
         self.counters: dict[tuple, list] = {}     # key -> [name, labels, val]
         self.gauges: dict[tuple, Gauge] = {}
         self.histograms: dict[tuple, Histogram] = {}
+        self.timeseries: dict[tuple, TimeSeries] = {}
         self.spans: list[dict] = []               # completed spans, log order
         self._span_stack: list[Span] = []
         self._epoch = time.perf_counter()
@@ -248,9 +343,32 @@ class Telemetry(NullTelemetry):
                                                  self.latency_buckets)
         h.observe(value)
 
+    def record(self, name: str, t: float, value: float, **labels) -> None:
+        """Append one sim-time sample to the named :class:`TimeSeries`."""
+        key = (name, _labels_key(labels))
+        s = self.timeseries.get(key)
+        if s is None:
+            s = self.timeseries[key] = TimeSeries(name, labels,
+                                                  self.series_max_points)
+        s.record(t, value)
+
     def histogram(self, name: str, **labels) -> Histogram | None:
         """The named histogram cell (None if nothing observed yet)."""
         return self.histograms.get((name, _labels_key(labels)))
+
+    def series(self, name: str, **labels) -> TimeSeries | None:
+        """The named timeline cell (None if nothing recorded yet)."""
+        return self.timeseries.get((name, _labels_key(labels)))
+
+    def series_names(self) -> list[str]:
+        """Sorted distinct timeline metric names."""
+        return sorted({s.name for s in self.timeseries.values()})
+
+    def clear_series(self) -> None:
+        """Drop every timeline (the engine calls this at run start: the
+        sim clock restarts at zero each run, so series never span runs —
+        unlike counters/gauges/histograms, which keep aggregating)."""
+        self.timeseries.clear()
 
     def counter_value(self, name: str, **labels) -> float:
         cell = self.counters.get((name, _labels_key(labels)))
@@ -282,6 +400,7 @@ class Telemetry(NullTelemetry):
                          for n, lb, v in self.counters.values()],
             "gauges": [g.snapshot() for g in self.gauges.values()],
             "histograms": [h.snapshot() for h in self.histograms.values()],
+            "series": [s.snapshot() for s in self.timeseries.values()],
             "spans": len(self.spans),
         }
 

@@ -2,10 +2,17 @@
 
 The registry itself lives in ``repro.core.telemetry`` (a leaf module the
 instrumented hot paths import); this package holds the operator-facing
-output formats — JSON snapshot, Prometheus text exposition, and the
-Chrome trace-event / Perfetto export of a simulation timeline
-(``repro.telemetry.export``).
+output formats — JSON snapshot, Prometheus text exposition, the Chrome
+trace-event / Perfetto export of a simulation timeline
+(``repro.telemetry.export``), the self-contained HTML run report
+(``repro.telemetry.report``), and the benchmark regression gate +
+history trajectory (``repro.telemetry.baseline``).
 """
+from repro.telemetry.baseline import (append_history,  # noqa: F401
+                                      compare_reports, format_verdict,
+                                      history_entries)
 from repro.telemetry.export import (json_snapshot, parse_prometheus,  # noqa: F401
                                     perfetto_trace, prometheus_text,
                                     validate_trace, write_perfetto)
+from repro.telemetry.report import (html_report,  # noqa: F401
+                                    write_html_report)

@@ -13,10 +13,11 @@ Three operator-facing views of one run:
   (:class:`~repro.cluster.engine.SimResult`) as Chrome trace-event JSON
   loadable in ``ui.perfetto.dev``: one track group per node carrying its
   task spans (one lane per concurrency level) and power-state intervals,
-  plus one track per policy carrying its processed events as instants.
-  :func:`validate_trace` checks the trace-event schema invariants the
-  tests pin (known phases, sorted timestamps, matched B/E pairs per
-  track).
+  plus one track per policy carrying its processed events as instants and
+  counter tracks ("C" events) for the recorded power / queue / carbon
+  series. :func:`validate_trace` checks the trace-event schema invariants
+  the tests pin (known phases, sorted timestamps, matched B/E pairs per
+  track, strictly increasing numeric counter samples).
 
 Everything here reads sim state and telemetry; nothing writes back — the
 exporters sit strictly on the observer side of the pure-observer
@@ -98,6 +99,16 @@ def prometheus_text(tel) -> str:
     for g in tel.gauges.values():
         typeline(g.name, "gauge")
         lines.append(f"{g.name}{_labels_str(g.labels)} {_fmt(g.value)}")
+    # gauge min/max/samples envelopes as companion families (each family
+    # contiguous, per the exposition format's grouping rule)
+    for suffix, attr in (("_min", "min"), ("_max", "max"),
+                         ("_samples", "samples")):
+        for g in tel.gauges.values():
+            if not g.samples:
+                continue
+            typeline(f"{g.name}{suffix}", "gauge")
+            lines.append(f"{g.name}{suffix}{_labels_str(g.labels)} "
+                         f"{_fmt(getattr(g, attr))}")
     for h in tel.histograms.values():
         typeline(h.name, "histogram")
         ls = dict(h.labels)
@@ -166,7 +177,7 @@ def _assign_lanes(spans: list[tuple[float, float, object]]) -> list[int]:
     return lanes
 
 
-def perfetto_trace(result, trace_name: str = "scenario") -> dict:
+def perfetto_trace(result, trace_name: str = "scenario", tel=None) -> dict:
     """A :class:`~repro.cluster.engine.SimResult` as Chrome trace-event /
     Perfetto JSON (load at ``ui.perfetto.dev``).
 
@@ -176,8 +187,13 @@ def perfetto_trace(result, trace_name: str = "scenario") -> dict:
     span named ``pod <uid> (<scheduler>)``, concurrency split across
     lanes so pairs always nest) — plus one "policies" process with one
     thread per policy track (kernel / carbon / autoscale) carrying the
-    processed event log as instants. Timestamps are simulation
-    microseconds; the export never mutates the result."""
+    processed event log as instants, and one "counters" process whose "C"
+    events render power / queue / carbon as Perfetto counter tracks.
+    Counter values come from ``tel``'s recorded :class:`TimeSeries` when a
+    telemetry registry is passed; otherwise the fleet power and carbon
+    series are derived from the result's ledger, so every trace carries at
+    least the power counter. Timestamps are simulation microseconds; the
+    export never mutates the result."""
     timeline = result._timeline()
     node_names: set[str] = {r.node for r in result.records}
     node_names.update(iv.node for iv in timeline.state_intervals)
@@ -253,6 +269,37 @@ def perfetto_trace(result, trace_name: str = "scenario") -> dict:
         instant(pol_pid, tid, kind, t, "event",
                 {} if payload is None else {"payload": payload})
 
+    # counter tracks ("C" events): one per recorded series (or the
+    # ledger-derived power/carbon series when no registry is passed)
+    cnt_pid = len(nodes) + 2
+    counter_series: list[tuple[str, list[tuple[float, float]]]] = []
+    if tel is not None and getattr(tel, "timeseries", None):
+        for s in tel.timeseries.values():
+            name = s.name + _labels_str(s.labels)
+            counter_series.append((name, s.points()))
+    else:
+        edges, watts = timeline.power_series(None)
+        if len(edges):
+            pts = [(float(t), float(w))
+                   for t, w in zip(edges[:-1], watts)]
+            pts.append((float(edges[-1]), float(watts[-1])))
+            counter_series.append(("fleet_power_w", pts))
+        if timeline.carbon_signal is not None:
+            c_edges, grams = timeline.carbon_series(None)
+            if len(c_edges):
+                counter_series.append(
+                    ("fleet_carbon_cum_g",
+                     [(float(t), float(g))
+                      for t, g in zip(c_edges, grams)]))
+    if counter_series:
+        meta.append({"ph": "M", "pid": cnt_pid, "name": "process_name",
+                     "args": {"name": "counters"}})
+        for name, pts in counter_series:
+            for t, v in pts:
+                events.append({"ph": "C", "ts": us(t), "pid": cnt_pid,
+                               "tid": 0, "name": name, "cat": "counter",
+                               "args": {"value": float(v)}})
+
     # sorted timestamps; at equal instants close spans before opening the
     # next one so back-to-back B/E pairs on a lane stay matched
     events.sort(key=lambda e: (e["ts"], 0 if e["ph"] == "E" else 1))
@@ -260,28 +307,32 @@ def perfetto_trace(result, trace_name: str = "scenario") -> dict:
             "otherData": {"name": trace_name}}
 
 
-def write_perfetto(result, path, trace_name: str = "scenario") -> str:
+def write_perfetto(result, path, trace_name: str = "scenario",
+                   tel=None) -> str:
     """Write :func:`perfetto_trace` JSON to ``path`` (conventionally
     ``*.trace.json``); returns the path."""
-    trace = perfetto_trace(result, trace_name=trace_name)
+    trace = perfetto_trace(result, trace_name=trace_name, tel=tel)
     with open(path, "w") as f:
         json.dump(trace, f)
     return str(path)
 
 
-_PHASES = frozenset("BEiM")
+_PHASES = frozenset("BEiMC")
 
 
 def validate_trace(trace) -> dict:
     """Check the trace-event schema invariants: known phases, numeric
     non-negative timestamps, timestamps sorted over the non-metadata
-    stream, and — per (pid, tid) track — B/E pairs that match like
-    parentheses with equal names and are all closed at the end. Raises
+    stream, per (pid, tid) track B/E pairs that match like parentheses
+    with equal names and are all closed at the end, and — per
+    (pid, tid, name) counter track — "C" events carrying a non-empty dict
+    of finite numeric args with strictly increasing timestamps. Raises
     ``ValueError`` on the first violation; returns summary counts."""
     events = trace["traceEvents"] if isinstance(trace, dict) else trace
     last_ts = -math.inf
     stacks: dict[tuple, list] = {}
-    n_spans = n_instants = 0
+    counter_ts: dict[tuple, float] = {}
+    n_spans = n_instants = n_counters = 0
     for i, ev in enumerate(events):
         ph = ev.get("ph")
         if ph not in _PHASES:
@@ -310,10 +361,28 @@ def validate_trace(trace) -> dict:
                     f"event {i}: E name {ev.get('name')!r} does not match "
                     f"open B name {b.get('name')!r} on track {key}")
             n_spans += 1
+        elif ph == "C":
+            args = ev.get("args")
+            if not isinstance(args, dict) or not args:
+                raise ValueError(f"event {i}: counter with no args")
+            for k, v in args.items():
+                if isinstance(v, bool) or not isinstance(v, (int, float)) \
+                        or not math.isfinite(v):
+                    raise ValueError(f"event {i}: counter arg {k}={v!r} "
+                                     f"is not a finite number")
+            track = (ev.get("pid"), ev.get("tid"), ev.get("name"))
+            prev = counter_ts.get(track)
+            if prev is not None and ts <= prev:
+                raise ValueError(
+                    f"event {i}: counter track {track} ts {ts} <= "
+                    f"previous {prev} (must be strictly increasing)")
+            counter_ts[track] = ts
+            n_counters += 1
         else:
             n_instants += 1
     open_tracks = {k: len(v) for k, v in stacks.items() if v}
     if open_tracks:
         raise ValueError(f"unclosed B events at end of trace: {open_tracks}")
     return {"events": len(events), "spans": n_spans,
-            "instants": n_instants, "tracks": len(stacks)}
+            "instants": n_instants, "counters": n_counters,
+            "tracks": len(stacks)}

@@ -335,3 +335,74 @@ def test_write_report_stamps_provenance():
     # an explicit provenance block is preserved, not overwritten
     rep2 = write_report({"provenance": {"pinned": True}}, out=None)
     assert rep2["provenance"] == {"pinned": True}
+
+
+# --- gauge min/max/samples envelopes in the exposition -----------------------
+def test_prometheus_gauge_envelope_round_trip():
+    tel = Telemetry()
+    for v in (3.0, -1.0, 7.0):
+        tel.set_gauge("engine_pending_depth", v, policy="fifo")
+    text = prometheus_text(tel)
+    for suffix in ("_min", "_max", "_samples"):
+        assert f"# TYPE engine_pending_depth{suffix} gauge" in text
+    parsed = parse_prometheus(text)
+    labels = (("policy", "fifo"),)
+    assert parsed[("engine_pending_depth", labels)] == 7.0
+    assert parsed[("engine_pending_depth_min", labels)] == -1.0
+    assert parsed[("engine_pending_depth_max", labels)] == 7.0
+    assert parsed[("engine_pending_depth_samples", labels)] == 3.0
+    # an unset gauge family emits no envelope series
+    assert "_min" not in prometheus_text(Telemetry())
+
+
+# --- Perfetto counter ("C") events -------------------------------------------
+def test_perfetto_counter_tracks_from_registry(tmp_path):
+    with telemetry.enabled() as tel:
+        res = run_cell("carbon_autoscale", "numpy")
+    trace = perfetto_trace(res, tel=tel)
+    stats = validate_trace(trace)
+    assert stats["counters"] > 0
+    c_names = {ev["name"] for ev in trace["traceEvents"]
+               if ev["ph"] == "C"}
+    assert "fleet_power_w" in c_names
+    assert "engine_pending_depth" in c_names
+    assert any(n.startswith("fleet_carbon_cum_g") for n in c_names)
+    proc_names = {ev["args"]["name"] for ev in trace["traceEvents"]
+                  if ev["ph"] == "M" and ev["name"] == "process_name"}
+    assert "counters" in proc_names
+    # without a registry the ledger-derived power counter still exists
+    trace2 = perfetto_trace(res)
+    c2 = {ev["name"] for ev in trace2["traceEvents"] if ev["ph"] == "C"}
+    assert "fleet_power_w" in c2
+    assert validate_trace(trace2)["counters"] > 0
+    path = write_perfetto(res, tmp_path / "run.trace.json", tel=tel)
+    assert validate_trace(json.load(open(path))) == stats
+
+
+def test_validate_trace_counter_violations():
+    ok = [{"ph": "C", "ts": 0.0, "pid": 9, "tid": 0, "name": "p",
+           "args": {"value": 1.5}},
+          {"ph": "C", "ts": 1.0, "pid": 9, "tid": 0, "name": "p",
+           "args": {"value": 2.0}}]
+    assert validate_trace(ok)["counters"] == 2
+    with pytest.raises(ValueError, match="no args"):
+        validate_trace([{"ph": "C", "ts": 0.0, "pid": 9, "tid": 0,
+                         "name": "p", "args": {}}])
+    with pytest.raises(ValueError, match="finite number"):
+        validate_trace([{"ph": "C", "ts": 0.0, "pid": 9, "tid": 0,
+                         "name": "p", "args": {"value": "fast"}}])
+    with pytest.raises(ValueError, match="finite number"):
+        validate_trace([{"ph": "C", "ts": 0.0, "pid": 9, "tid": 0,
+                         "name": "p", "args": {"value": math.nan}}])
+    # duplicate timestamp on one counter track: rejected; distinct
+    # tracks at one instant: fine
+    with pytest.raises(ValueError, match="strictly increasing"):
+        validate_trace([{"ph": "C", "ts": 1.0, "pid": 9, "tid": 0,
+                         "name": "p", "args": {"value": 1.0}},
+                        {"ph": "C", "ts": 1.0, "pid": 9, "tid": 0,
+                         "name": "p", "args": {"value": 2.0}}])
+    two_tracks = [{"ph": "C", "ts": 1.0, "pid": 9, "tid": 0, "name": "p",
+                   "args": {"value": 1.0}},
+                  {"ph": "C", "ts": 1.0, "pid": 9, "tid": 0, "name": "q",
+                   "args": {"value": 2.0}}]
+    assert validate_trace(two_tracks)["counters"] == 2

@@ -1,0 +1,332 @@
+"""Sim-time metric timelines, the benchmark regression gate, and the
+operator HTML report.
+
+The timeline layer extends the pure-observer invariant to series: same
+scenario ⇒ bit-identical series on every backend (placements are already
+bitwise, and every sample is a deterministic function of sim state).
+test_telemetry.py pins that recording doesn't change the run; this file
+pins what the recorder itself produces.
+"""
+import json
+import math
+import xml.etree.ElementTree as ET
+
+import pytest
+
+from engine_golden_spec import run_cell
+from repro.core import telemetry
+from repro.core.telemetry import (DEFAULT_SERIES_MAX_POINTS, Telemetry,
+                                  TimeSeries)
+from repro.telemetry.baseline import (append_history, cell_key,
+                                     compare_reports, format_verdict,
+                                     history_entries)
+from repro.telemetry.report import html_report, write_html_report
+
+
+@pytest.fixture(autouse=True)
+def _clean_registry():
+    telemetry.disable()
+    yield
+    telemetry.disable()
+
+
+# --- TimeSeries primitive ----------------------------------------------------
+def test_series_append_and_last_write_wins():
+    s = TimeSeries("q")
+    s.record(0.0, 1.0)
+    s.record(1.0, 2.0)
+    s.record(1.0, 3.0)          # same sim instant: overwrite
+    assert s.points() == [(0.0, 1.0), (1.0, 3.0)]
+    assert s.samples == 3       # pre-decimation count keeps every call
+    with pytest.raises(ValueError, match="backwards"):
+        s.record(0.5, 9.0)
+
+
+def test_series_decimation_bound_and_endpoints():
+    s = TimeSeries("q", max_points=8)
+    for i in range(1000):
+        s.record(float(i), float(i * i))
+    assert len(s) <= 8
+    assert s.samples == 1000
+    # endpoints are always exact, interior points are a subset
+    assert s.times[0] == 0.0 and s.values[0] == 0.0
+    assert s.times[-1] == 999.0 and s.values[-1] == 999.0 ** 2
+    assert all(v == t * t for t, v in s.points())
+    assert list(s.times) == sorted(s.times)
+    with pytest.raises(ValueError, match=">= 4"):
+        TimeSeries("q", max_points=2)
+
+
+def test_series_decimation_deterministic():
+    def build():
+        s = TimeSeries("q", max_points=16)
+        for i in range(257):
+            s.record(i * 0.5, math.sin(i))
+        return s.snapshot()
+
+    assert build() == build()
+
+
+def test_registry_series_cells_and_snapshot():
+    tel = Telemetry(series_max_points=32)
+    tel.record("power", 0.0, 5.0, region="eu")
+    tel.record("power", 1.0, 6.0, region="eu")
+    tel.record("power", 0.0, 2.0, region="us")
+    tel.record("depth", 3.0, 1.0)
+    assert tel.series_names() == ["depth", "power"]
+    assert tel.series("power", region="eu").points() == [(0.0, 5.0),
+                                                         (1.0, 6.0)]
+    assert tel.series("power", region="us").max_points == 32
+    assert tel.series("power") is None          # label-distinct cell
+    snap = tel.snapshot()
+    assert {s["name"] for s in snap["series"]} == {"power", "depth"}
+    # the null registry swallows records (hot paths never branch)
+    telemetry.NULL.record("power", 0.0, 1.0)
+    assert not telemetry.NULL.enabled
+
+
+# --- engine timelines: determinism and physics -------------------------------
+def _record_run(backend):
+    with telemetry.enabled() as tel:
+        res = run_cell("carbon_autoscale", backend)
+    return tel, res
+
+
+def test_engine_series_present_and_consistent():
+    tel, res = _record_run("numpy")
+    names = tel.series_names()
+    for want in ("engine_pending_depth", "engine_running_tasks",
+                 "fleet_awake_nodes", "fleet_power_w",
+                 "fleet_energy_cum_kj", "fleet_carbon_cum_g",
+                 "fleet_state_nodes", "state_power_w",
+                 "carbon_intensity_g_per_kwh", "region_carbon_cum_g",
+                 "scheduler_energy_cum_kj"):
+        assert want in names, want
+    # every series is on the sim clock: non-negative, monotone timestamps
+    for s in tel.timeseries.values():
+        assert list(s.times) == sorted(s.times)
+        assert s.times[0] >= 0.0
+        assert len(s) <= DEFAULT_SERIES_MAX_POINTS
+    # cumulative sampled energy/carbon never exceed the exact ledger
+    # totals (left-rectangle sampling stops at the last visited instant)
+    tl = res._timeline()
+    cum_e = tel.series("fleet_energy_cum_kj").values
+    assert all(b >= a for a, b in zip(cum_e, cum_e[1:]))
+    assert 0.0 < cum_e[-1] <= tl.fleet_energy_kj() + 1e-9
+    cum_c = tel.series("fleet_carbon_cum_g").values
+    assert 0.0 < cum_c[-1] <= tl.fleet_carbon_g() + 1e-9
+    # the ledger-published per-scheduler series ends at the exact total
+    for sched in ("topsis", "default"):
+        s = tel.series("scheduler_energy_cum_kj", scheduler=sched)
+        assert s.values[-1] == pytest.approx(res.energy_kj(sched),
+                                             rel=1e-12)
+
+
+@pytest.mark.parametrize("backend", ["jax", "pallas"])
+def test_series_bitwise_identical_across_backends(backend):
+    tel_np, _ = _record_run("numpy")
+    tel_acc, _ = _record_run(backend)
+    snap_np = {k: s.snapshot() for k, s in tel_np.timeseries.items()}
+    snap_acc = {k: s.snapshot() for k, s in tel_acc.timeseries.items()}
+    assert snap_np == snap_acc
+
+
+# --- regression gate ---------------------------------------------------------
+def _cells():
+    return [{"profile": "mixed", "n_nodes": 8, "backend": "numpy",
+             "energy_topsis_kj": 10.0, "preemptions": 3,
+             "mean_sched_time_topsis_ms": 5.0},
+            {"profile": "mixed", "n_nodes": 8, "backend": "pallas",
+             "energy_topsis_kj": 11.0,
+             "mean_sched_time_topsis_ms": 50.0}]
+
+
+def _rep(cells, prov=None):
+    rep = {"bench": "scenario_sweep", "results": cells}
+    if prov is not None:
+        rep["provenance"] = prov
+    return rep
+
+
+def test_gate_passes_on_identical_reports():
+    v = compare_reports(_rep(_cells()), _rep(_cells()))
+    assert v["status"] == "pass" and v["regressions"] == 0
+    assert all(r["status"] == "ok" for r in v["rows"])
+    assert "[PASS]" in format_verdict(v)
+
+
+def test_gate_trips_on_exact_drift_both_directions():
+    for factor in (1.01, 0.99):
+        cur = _cells()
+        cur[0]["energy_topsis_kj"] *= factor
+        v = compare_reports(_rep(cur), _rep(_cells()))
+        assert v["status"] == "regression"
+        bad = [r for r in v["rows"] if r["status"] == "regression"]
+        assert [r["metric"] for r in bad] == ["energy_topsis_kj"]
+        assert "[REGRESSION]" in format_verdict(v)
+        assert "energy_topsis_kj" in format_verdict(v)
+
+
+def test_gate_timing_is_one_sided_with_headroom():
+    cur = _cells()
+    cur[0]["mean_sched_time_topsis_ms"] *= 1.5     # within +75%
+    assert compare_reports(_rep(cur), _rep(_cells()))["status"] == "pass"
+    cur[0]["mean_sched_time_topsis_ms"] = 5.0 * 2.0  # +100%: trips
+    v = compare_reports(_rep(cur), _rep(_cells()))
+    assert v["status"] == "regression"
+    cur[0]["mean_sched_time_topsis_ms"] = 0.5      # 10x faster: improved
+    v = compare_reports(_rep(cur), _rep(_cells()))
+    assert v["status"] == "pass"
+    assert any(r["status"] == "improved" for r in v["rows"])
+
+
+def test_gate_interpret_mode_skips_timings_not_physics():
+    cur = _rep(_cells(), prov={"pallas_interpret": True})
+    base = _rep(_cells(), prov={"pallas_interpret": False})
+    cur["results"][1]["mean_sched_time_topsis_ms"] = 5000.0  # 100x slower
+    cur["results"][1]["energy_topsis_kj"] = 11.5             # and wrong
+    v = compare_reports(cur, base)
+    skipped = [r for r in v["rows"] if r["status"] == "skipped"]
+    assert [(r["metric"], r["cell"].split("/")[0]) for r in skipped] \
+        == [("mean_sched_time_topsis_ms", "backend=pallas")]
+    assert "interpret_mode" in skipped[0]["reason"]
+    # the physics drift on the same cell still trips
+    assert v["status"] == "regression"
+    # a per-cell interpret_mode annotation wins over report provenance
+    cur["results"][1]["interpret_mode"] = False
+    v2 = compare_reports(cur, base)
+    assert not any(r["status"] == "skipped" for r in v2["rows"])
+
+
+def test_gate_platform_mismatch_skips_all_timings():
+    cur = _rep(_cells(), prov={"jax_platform": "tpu"})
+    base = _rep(_cells(), prov={"jax_platform": "cpu"})
+    cur["results"][0]["mean_sched_time_topsis_ms"] = 5000.0
+    v = compare_reports(cur, base)
+    assert v["status"] == "pass"
+    timing = [r for r in v["rows"]
+              if r["metric"] == "mean_sched_time_topsis_ms"]
+    assert timing and all(r["status"] == "skipped" for r in timing)
+    assert all("jax_platform" in r["reason"] for r in timing)
+
+
+def test_gate_missing_cells_and_unknown_metrics_surface():
+    cur = _cells()[:1]
+    cur[0]["shiny_new_metric"] = 1.23          # unregistered float
+    base = _cells()
+    base[1]["n_nodes"] = 64                    # cell only in baseline
+    v = compare_reports(_rep(cur), _rep(base))
+    assert v["status"] == "pass"               # warnings, not failures
+    assert len(v["missing_in_current"]) == 1
+    assert "n_nodes=64" in v["missing_in_current"][0]
+    assert v["unchecked_metrics"] == ["shiny_new_metric"]
+    assert "shiny_new_metric" in format_verdict(v)
+    # the unknown float is excluded from identity, so the cell matched
+    assert cell_key(cur[0]) == cell_key(_cells()[0])
+
+
+def test_check_cli_exit_codes(tmp_path, monkeypatch):
+    import benchmarks.common
+    import benchmarks.run as run_mod
+    monkeypatch.setattr(benchmarks.common, "HISTORY_DIR",
+                        str(tmp_path / "history"))
+    monkeypatch.chdir(tmp_path)
+    (tmp_path / "baselines").mkdir()
+    report = _rep(_cells())
+    (tmp_path / "BENCH_scenarios.json").write_text(json.dumps(report))
+    (tmp_path / "baselines" / "BENCH_scenarios.json").write_text(
+        json.dumps(report))
+    files = ("BENCH_scenarios.json",)
+    assert run_mod.check(files=files,
+                         baseline_dir=str(tmp_path / "baselines")) == 0
+    # perturb the physics: nonzero exit
+    report["results"][0]["energy_topsis_kj"] *= 1.05
+    (tmp_path / "BENCH_scenarios.json").write_text(json.dumps(report))
+    assert run_mod.check(files=files,
+                         baseline_dir=str(tmp_path / "baselines")) == 1
+    # both runs appended to the history trajectory
+    entries = history_entries(tmp_path / "history"
+                              / "scenario_sweep.jsonl")
+    assert [e["status"] for e in entries] == ["pass", "regression"]
+    assert all(e["kind"] == "check" for e in entries)
+    # missing baseline: warn and pass
+    assert run_mod.check(files=files,
+                         baseline_dir=str(tmp_path / "nowhere")) == 0
+
+
+def test_write_report_appends_history(tmp_path, monkeypatch):
+    import benchmarks.common as common
+    monkeypatch.setattr(common, "HISTORY_DIR", str(tmp_path / "history"))
+    out = tmp_path / "BENCH_x.json"
+    common.write_report({"bench": "x_sweep", "config": {"seed": 0},
+                         "results": [{"a": 1}]}, str(out))
+    common.write_report({"bench": "x_sweep", "config": {"seed": 0},
+                         "results": [{"a": 2}]}, str(out))
+    entries = history_entries(tmp_path / "history" / "x_sweep.jsonl")
+    assert [e["kind"] for e in entries] == ["record", "record"]
+    assert entries[1]["results"] == [{"a": 2}]
+    assert entries[0]["provenance"]["python"]
+    # out=None records nothing
+    common.write_report({"bench": "y_sweep", "results": []}, None)
+    assert history_entries(tmp_path / "history" / "y_sweep.jsonl") == []
+
+
+def test_history_round_trip(tmp_path):
+    path = tmp_path / "h.jsonl"
+    assert history_entries(path) == []
+    append_history({"kind": "check", "status": "pass"}, path)
+    append_history({"kind": "record", "bench": "b"}, path)
+    entries = history_entries(path)
+    assert len(entries) == 2 and entries[0]["status"] == "pass"
+
+
+def test_aggregate_warns_on_mismatched_provenance(capsys):
+    from benchmarks.run import _provenance_warnings
+    summary = {
+        "BENCH_a.json": {"provenance": {"git_sha": "aaa",
+                                        "pallas_interpret": True}},
+        "BENCH_b.json": {"provenance": {"git_sha": "bbb",
+                                        "pallas_interpret": True}},
+    }
+    warnings = _provenance_warnings(summary)
+    assert len(warnings) == 1 and "git SHAs" in warnings[0]
+    summary["BENCH_b.json"]["provenance"] = {"git_sha": "aaa",
+                                             "pallas_interpret": False}
+    warnings = _provenance_warnings(summary)
+    assert len(warnings) == 1 and "interpret" in warnings[0]
+    # coherent fingerprints: silent
+    summary["BENCH_b.json"]["provenance"] = {"git_sha": "aaa",
+                                             "pallas_interpret": True}
+    assert _provenance_warnings(summary) == []
+
+
+# --- HTML report -------------------------------------------------------------
+def test_html_report_well_formed_and_complete(tmp_path):
+    tel, res = _record_run("numpy")
+    doc = html_report(tel=tel, result=res, title="golden <run> & report")
+    root = ET.fromstring(doc)            # well-formed XML or bust
+    assert root.tag == "html"
+    for name in tel.series_names():
+        assert name in doc, f"series {name} missing from report"
+    # the title is escaped, summary tiles and registry render
+    assert "golden &lt;run&gt; &amp; report" in doc
+    assert "Pods placed" in doc
+    assert "scheduler_decision_seconds" in doc
+    path = write_html_report(tmp_path / "run.html", tel=tel, result=res)
+    assert ET.fromstring(open(path).read()).tag == "html"
+
+
+def test_html_report_degenerate_inputs_still_parse():
+    assert ET.fromstring(html_report()).tag == "html"
+    tel = Telemetry()
+    tel.record("lonely_series", 0.0, 1.0)
+    doc = html_report(tel=tel)
+    ET.fromstring(doc)
+    assert "lonely_series" in doc
+    # single label variant: no legend box (the chart title names it)
+    assert 'class="legend"' not in doc
+    tel.record("lonely_series", 0.0, 2.0, region="eu")
+    tel.record("lonely_series", 0.0, 3.0, region="us")
+    doc2 = html_report(tel=tel)
+    ET.fromstring(doc2)
+    assert 'class="legend"' in doc2      # >=2 variants: legend present
