@@ -22,7 +22,8 @@ import time
 
 # The recorded sweep files the aggregation pass knows how to headline.
 BENCH_FILES = ("BENCH_scheduling.json", "BENCH_scenarios.json",
-               "BENCH_carbon.json", "BENCH_autoscale.json")
+               "BENCH_carbon.json", "BENCH_autoscale.json",
+               "BENCH_pareto.json")
 
 BASELINE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                             "baselines")
@@ -57,6 +58,19 @@ def _headline(name: str, data: dict) -> dict:
                if s["policy"] == "idle_timeout"]
         if red:
             out["idle_reduction_pct_range"] = [min(red), max(red)]
+    elif name == "BENCH_pareto.json":
+        # headline: best fused-vs-serial speedup at S >= 512 on jax (the
+        # acceptance number); falls back to any-S when the sweep was small
+        ups = [r["speedup_fused_vs_serial"] for r in results
+               if r.get("backend") == "jax"
+               and r.get("speedup_fused_vs_serial")
+               and r.get("n_schemes", 0) >= 512]
+        if not ups:
+            ups = [r["speedup_fused_vs_serial"] for r in results
+                   if r.get("backend") == "jax"
+                   and r.get("speedup_fused_vs_serial")]
+        if ups:
+            out["max_grid_speedup_jax"] = round(max(ups), 2)
     return out
 
 

@@ -29,7 +29,8 @@ from repro.core.carbon import CarbonSignal
 from repro.core.criteria import (benefit_mask, criteria_matrix,
                                  greenpod_criteria, placement_power)
 from repro.core.energy import predicted_task_energy_joules
-from repro.core.weighting import CARBON_SCHEMES, adaptive_weights, weights_for
+from repro.core.weighting import (CARBON_SCHEMES, adaptive_weights,
+                                  scheme_grid, validate_weights, weights_for)
 from repro.cluster.node import FleetState, Node, NodeTable
 from repro.cluster.workload import Pod
 
@@ -108,6 +109,36 @@ def _score(mat: np.ndarray, weights: np.ndarray, valid: np.ndarray,
         return np.asarray(ops.topsis_closeness(mat, weights, benefit,
                                                valid=valid))
     raise ValueError(f"unknown backend {backend!r}; choose from {BACKENDS}")
+
+
+def _greedy_assign(cc: np.ndarray, pods: Sequence[Pod], table: NodeTable,
+                   blocked=None) -> "list[int | None]":
+    """Commit one (P, N) closeness matrix greedily in queue order against a
+    fresh capacity ledger: each pod takes its best-ranked node that still
+    fits (``blocked[i]`` optionally forbids one node index for ``pods[i]``).
+    Extracted from :meth:`BatchScheduler.select_many` so the grid path
+    commits every scheme through identical code — the per-scheme ledgers
+    are independent what-if placements off the same snapshot."""
+    order = np.argsort(-cc, kind="stable", axis=-1)
+    free_cpu = table.free_cpu.copy()
+    free_mem = table.free_mem.copy()
+    assignments: list[int | None] = []
+    for i, pod in enumerate(pods):
+        forbid = blocked[i] if blocked is not None else None
+        chosen = None
+        for j in order[i]:
+            if np.isneginf(cc[i, j]):
+                break           # rest of the ranking is infeasible
+            if forbid is not None and int(j) == forbid:
+                continue
+            if free_cpu[j] >= pod.cpu - 1e-9 \
+                    and free_mem[j] >= pod.mem - 1e-9:
+                chosen = int(j)
+                free_cpu[j] -= pod.cpu
+                free_mem[j] -= pod.mem
+                break
+        assignments.append(chosen)
+    return assignments
 
 
 def _check_carbon_scheme(scheme: str, carbon_signal) -> None:
@@ -231,11 +262,13 @@ def _jit_helpers():
     """The incremental jax path's jitted helpers, built lazily so importing
     the scheduler never pays jax tracing up front."""
     global _scatter_node_cols, _set_carbon_col, _closeness_from_kinds
+    global _closeness_grid_from_kinds
     if _scatter_node_cols is not None:
         return
     import functools
 
     import jax
+    import jax.numpy as jnp
 
     @functools.partial(jax.jit, donate_argnums=(0,))
     def _scatter_node_cols(dev, idx, block):
@@ -255,10 +288,26 @@ def _jit_helpers():
         return topsis.batched_closeness(dev[kind_idx], ws, benefit,
                                         valids).closeness
 
+    @jax.jit
+    def _closeness_grid_from_kinds(dev, kind_idx, ws, benefit, valids):
+        # the grid round: ONE fused gather + (S, P, N) closeness dispatch
+        # off the device-resident kind tensor — no re-upload per scheme.
+        # The gather happens once; XLA shares the weight-independent
+        # normalization across the vmapped scheme axis.
+        mats = dev[kind_idx]
+
+        def one_scheme(w):
+            wp = jnp.broadcast_to(w, (mats.shape[0], w.shape[-1]))
+            return topsis.batched_closeness(mats, wp, benefit,
+                                            valids).closeness
+
+        return jax.vmap(one_scheme)(ws)
+
 
 _scatter_node_cols = None
 _set_carbon_col = None
 _closeness_from_kinds = None
+_closeness_grid_from_kinds = None
 
 
 def _pow2_pad_len(n: int) -> int:
@@ -547,6 +596,149 @@ class BatchScheduler:
             col = cache.mats[:, :, -1].astype(np.float32)
             self._dev = _set_carbon_col(self._dev, jnp.asarray(col))
 
+    def _weight_grid(self, schemes) -> np.ndarray:
+        """Resolve ``schemes`` — a sequence of scheme names or an (S, C)
+        array of weight vectors — into a validated (S, C) float64 grid
+        matching this scheduler's criteria count. Name rows go through
+        :func:`weights_for` (so the paper schemes stay bitwise identical to
+        the scalar path); raw vectors must pass
+        :func:`repro.core.weighting.validate_weights`, and 5-weight rows
+        are padded with a zero carbon weight when a signal is attached —
+        the same inert extension the named schemes get."""
+        carbon = self.carbon_signal is not None
+        seq = list(schemes) if not isinstance(schemes, np.ndarray) else None
+        if seq is not None and seq and all(isinstance(s, str) for s in seq):
+            for s in seq:
+                _check_carbon_scheme(s, self.carbon_signal)
+            return scheme_grid(tuple(seq), carbon=carbon)
+        ws = validate_weights(np.atleast_2d(np.asarray(schemes,
+                                                      dtype=np.float64)),
+                              name="schemes")
+        c = len(self._benefit)
+        if ws.shape[-1] == 5 and c == 6:
+            ws = np.concatenate([ws, np.zeros((ws.shape[0], 1))], axis=-1)
+        if ws.shape[-1] != c:
+            raise ValueError(
+                f"scheme grid has {ws.shape[-1]} weights but this "
+                f"scheduler scores {c} criteria "
+                f"({'with' if carbon else 'without'} a carbon signal)")
+        return ws
+
+    def score_queue_grid(self, pods: Sequence[Pod], nodes, schemes,
+                         now: float = 0.0, exclude=None) -> np.ndarray:
+        """(S, P, N) closeness tensor: the whole queue scored under every
+        weighting scheme in ONE engine dispatch (the Pareto-sweep path —
+        see ``repro.core.pareto``). ``schemes`` is a list of scheme names
+        or an (S, C) weight grid (:meth:`_weight_grid`); row ``s`` equals
+        what :meth:`score_queue` returns with ``ws[s]`` as the scheme.
+        ``now`` / ``exclude`` behave exactly as in :meth:`score_queue`;
+        the feasibility mask is scheme-independent and shared.
+
+        When ``nodes`` is the attached :class:`FleetState` this takes the
+        incremental path — dirty-column sync plus (jax) one fused
+        gather+grid-closeness dispatch against the device-resident kind
+        tensor, with no re-upload per scheme."""
+        table = _as_table(nodes)
+        ws = self._weight_grid(schemes)
+        if self._cache is not None and table is self._cache.fleet:
+            telemetry.active().inc("scheduler_score_grid",
+                                   path="incremental")
+            return self._score_grid_incremental(pods, table, ws, now,
+                                                exclude)
+        telemetry.active().inc("scheduler_score_grid", path="rebuild")
+        inten = (self.carbon_signal.intensities(table.region, now)
+                 if self.carbon_signal is not None else None)
+        mats = decision_matrix_batch(pods, table, carbon_intensity=inten)
+        valid = table.fits(np.asarray([p.cpu for p in pods])[:, None],
+                           np.asarray([p.mem for p in pods])[:, None])
+        if exclude is not None:
+            valid = valid & ~np.asarray(exclude, dtype=bool)
+        if self.backend == "numpy":
+            return topsis.closeness_grid_np(mats, ws, self._benefit, valid)
+        if self.backend == "jax":
+            cc = topsis.closeness_grid(mats, ws, self._benefit, valid)
+            return np.asarray(cc)
+        if self.backend == "pallas":
+            from repro.kernels import ops
+            return np.asarray(ops.topsis_closeness_grid(
+                mats, ws, self._benefit, valid=valid))
+        raise ValueError(f"unknown backend {self.backend!r}; "
+                         f"choose from {BACKENDS}")
+
+    def _score_grid_incremental(self, pods: Sequence[Pod],
+                                fleet: FleetState, ws: np.ndarray,
+                                now: float, exclude) -> np.ndarray:
+        """Grid round over the attached fleet: one dirty-column sync, then
+        the per-backend (S, P, N) scoring — numpy loops scheme x pod over
+        the zero-copy cache views (the reference), jax fuses gather + grid
+        closeness into one dispatch on the device mirror, pallas streams
+        the (P, N, C) gather through the weight-grid kernel."""
+        cache = self._cache
+        kind_idx, dirty, carbon_moved, grew = cache.sync(pods, now)
+        valid = fleet.fits(np.asarray([p.cpu for p in pods])[:, None],
+                           np.asarray([p.mem for p in pods])[:, None])
+        if exclude is not None:
+            valid = valid & ~np.asarray(exclude, dtype=bool)
+        if self.backend == "numpy":
+            return np.stack([
+                np.stack([
+                    np.asarray(topsis.closeness_np(cache.mats[k], w,
+                                                   self._benefit,
+                                                   valid[i]).closeness)
+                    for i, k in enumerate(kind_idx)])
+                for w in ws])
+        if self.backend == "jax":
+            import jax.numpy as jnp
+            _jit_helpers()
+            self._sync_device(cache, dirty, carbon_moved, grew)
+            p = len(pods)
+            p_pad = _pow2_pad_len(p)
+            if p_pad != p:
+                pad = p_pad - p
+                kind_idx = np.concatenate(
+                    [kind_idx, np.zeros(pad, dtype=kind_idx.dtype)])
+                valid = np.concatenate(
+                    [valid, np.zeros((pad, valid.shape[-1]), bool)])
+            cc = _closeness_grid_from_kinds(
+                self._dev, jnp.asarray(kind_idx), jnp.asarray(ws),
+                jnp.asarray(self._benefit), jnp.asarray(valid))
+            telemetry.active().inc("cache_fused_dispatches", backend="jax")
+            return np.asarray(cc[:, :p])
+        if self.backend == "pallas":
+            from repro.kernels import ops
+            return np.asarray(ops.topsis_closeness_grid(
+                cache.mats[kind_idx], ws, self._benefit, valid=valid))
+        raise ValueError(f"unknown backend {self.backend!r}; "
+                         f"choose from {BACKENDS}")
+
+    def select_many_grid(self, pods: Sequence[Pod], nodes, schemes,
+                         now: float = 0.0, exclude=None):
+        """What-if placement of one queue under every scheme: returns
+        ``(assignments, diagnostics)`` where ``assignments[s][i]`` is the
+        node index pods[i] would take under scheme ``s`` (or None). One
+        fused :meth:`score_queue_grid` dispatch scores all schemes; each
+        scheme's greedy capacity-ledger walk then starts from the SAME
+        fresh snapshot (``_greedy_assign``) — the per-scheme placements are
+        independent hypotheticals, identical to running
+        :meth:`select_many` once per scheme, which is what the frontier
+        layer compares. Input nodes are never mutated."""
+        with telemetry.active().span("scheduler_grid",
+                                     scheduler=self.name,
+                                     backend=self.backend) as sp:
+            table = _as_table(nodes)
+            n_s = len(schemes)
+            if not len(pods):
+                return ([[] for _ in range(n_s)],
+                        {"closeness": np.zeros((n_s, 0, len(table))),
+                         "scheduling_time_s": 0.0, "per_scheme_time_s": 0.0})
+            cc = self.score_queue_grid(pods, table, schemes, now=now,
+                                       exclude=exclude)
+            assignments = [_greedy_assign(cc[s], pods, table)
+                           for s in range(cc.shape[0])]
+        dt = sp.duration_s
+        return assignments, {"closeness": cc, "scheduling_time_s": dt,
+                             "per_scheme_time_s": dt / cc.shape[0]}
+
     def _explain_batch(self, pods, table, now, exclude, assignments) -> None:
         """Per-pod attribution for one batch round (numpy path): rebuild
         each pod's (N, C) matrix and validity exactly as ``score_queue``
@@ -606,25 +798,7 @@ class BatchScheduler:
                 return [], {"closeness": np.zeros((0, len(table))),
                             "scheduling_time_s": 0.0, "per_pod_time_s": 0.0}
             cc = self.score_queue(pods, table, now=now, exclude=exclude)
-            order = np.argsort(-cc, kind="stable", axis=-1)
-            free_cpu = table.free_cpu.copy()
-            free_mem = table.free_mem.copy()
-            assignments: list[int | None] = []
-            for i, pod in enumerate(pods):
-                forbid = blocked[i] if blocked is not None else None
-                chosen = None
-                for j in order[i]:
-                    if np.isneginf(cc[i, j]):
-                        break           # rest of the ranking is infeasible
-                    if forbid is not None and int(j) == forbid:
-                        continue
-                    if free_cpu[j] >= pod.cpu - 1e-9 \
-                            and free_mem[j] >= pod.mem - 1e-9:
-                        chosen = int(j)
-                        free_cpu[j] -= pod.cpu
-                        free_mem[j] -= pod.mem
-                        break
-                assignments.append(chosen)
+            assignments = _greedy_assign(cc, pods, table, blocked=blocked)
         dt = sp.duration_s
         per_pod = dt / len(pods)
         if explain:

@@ -37,6 +37,48 @@ CARBON_SCHEMES: dict[str, np.ndarray] = {
 CARBON_SCHEME_NAMES = tuple(CARBON_SCHEMES)
 
 
+def validate_weights(w, name: str | None = None) -> np.ndarray:
+    """Validate one weight vector or an (S, C) stack of them and return the
+    float64 array. A valid vector has 5 or 6 entries (the paper criteria,
+    optionally extended with carbon_rate), every entry finite and
+    non-negative, and sums to 1 within 1e-6 — the registry schemes are
+    stored unnormalized by design but leave :func:`weights_for` already
+    normalized, and the simplex-lattice grid (``repro.core.pareto``)
+    normalizes at generation, so everything the schedulers consume passes.
+    User-supplied grids that don't raise a ValueError naming the first
+    offending row instead of silently skewing the ranking."""
+    w = np.asarray(w, dtype=np.float64)
+    label = name or "weights"
+    if w.ndim not in (1, 2):
+        raise ValueError(f"{label} must be a (C,) vector or (S, C) grid, "
+                         f"got shape {w.shape}")
+    rows = w[None] if w.ndim == 1 else w
+    if rows.shape[-1] not in (5, 6):
+        raise ValueError(
+            f"{label} must have 5 weights (paper criteria) or 6 (with "
+            f"carbon_rate), got {rows.shape[-1]}")
+    for i, row in enumerate(rows):
+        where = label if w.ndim == 1 else f"{label}[{i}]"
+        if not np.isfinite(row).all():
+            raise ValueError(f"{where} has non-finite entries: {row}")
+        if (row < 0.0).any():
+            raise ValueError(f"{where} has negative entries: {row}")
+        total = float(row.sum())
+        if abs(total - 1.0) > 1e-6:
+            raise ValueError(
+                f"{where} sums to {total:.6f}, not 1 (±1e-6) — normalize "
+                f"it (w / w.sum()) before handing it to the scheduler")
+    return w
+
+
+def scheme_grid(schemes: "tuple[str, ...]" = SCHEME_NAMES,
+                carbon: bool = False) -> np.ndarray:
+    """(S, C) stack of :func:`weights_for` rows — the paper's named schemes
+    expressed as a weight grid, so the fused grid scorer recovers the fixed
+    per-scheme results as a special case (tests pin this bitwise)."""
+    return np.stack([weights_for(s, carbon=carbon) for s in schemes])
+
+
 def weights_for(scheme: str, carbon: bool = False) -> np.ndarray:
     """Normalized weight vector for a scheme.
 

@@ -133,6 +133,61 @@ def topsis_closeness_batched(mats: jax.Array, weights: jax.Array,
     return cc
 
 
+def topsis_closeness_grid(mats: jax.Array, weights: jax.Array,
+                          benefit: jax.Array, *,
+                          valid: jax.Array | None = None,
+                          block_n: int | None = None,
+                          interpret: bool | None = None) -> jax.Array:
+    """(S, P, N) closeness for a (P, N, C) queue tensor under an (S, C)
+    weight-scheme grid; C <= 8. The Pareto-sweep batch path: column norms
+    are scheme-independent and computed once per pod, the per-(scheme, pod)
+    ideal points are global reductions in XLA, and the Pallas kernel walks
+    the (pods x node blocks x schemes) grid with schemes innermost so each
+    criteria node-block is fetched from HBM once and reused across all S
+    schemes (see ``topsis_pallas.topsis_closeness_grid_blocks``). ``valid``
+    is the usual (P, N) feasibility mask, shared by every scheme; row
+    semantics match ``repro.core.topsis.closeness_grid``.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    mats = jnp.asarray(mats).astype(jnp.float32)
+    p, n, c = mats.shape
+    assert c <= _tp.C_PAD, f"at most {_tp.C_PAD} criteria, got {c}"
+    benefit = jnp.asarray(benefit, bool)
+    if valid is not None:
+        valid = jnp.asarray(valid, bool)
+    ws = jnp.asarray(weights, jnp.float32)
+    assert ws.ndim == 2 and ws.shape[-1] == c, (ws.shape, mats.shape)
+    s = ws.shape[0]
+    ws = ws / jnp.maximum(jnp.sum(ws, axis=-1, keepdims=True), _EPS)
+    norms = jnp.sqrt(jnp.sum(mats * mats, axis=1))              # (P, C)
+    inv_norm = 1.0 / jnp.maximum(norms, _EPS)
+    # (S, P, N, C) weighted normalized tensor — only for the ideal-point
+    # reductions; the kernel recomputes v blockwise from the (P, N, C) data
+    v = mats[None] * inv_norm[None, :, None, :] * ws[:, None, None, :]
+    a_pos, a_neg = _topsis.masked_ideal_points(
+        v, benefit, None if valid is None else valid[None])     # (S, P, C)
+
+    if block_n is None:
+        block_n = _auto_block_n(n)
+    xt = _pad_to(_pad_to(mats.transpose(0, 2, 1), 1, _tp.C_PAD), 2, block_n)
+
+    def col_p(x):   # (P, C) -> (P, C_PAD, 1)
+        return _pad_to(x.astype(jnp.float32), 1, _tp.C_PAD)[:, :, None]
+
+    def col_sp(x):  # (S, P, C) -> (S, P, C_PAD, 1)
+        return _pad_to(x.astype(jnp.float32), 2, _tp.C_PAD)[:, :, :, None]
+
+    wsp = jnp.broadcast_to(ws[:, None, :], (s, p, c))
+    cc = _tp.topsis_closeness_grid_blocks(
+        xt, col_p(inv_norm), col_sp(wsp), col_sp(a_pos), col_sp(a_neg),
+        block_n=block_n, interpret=interpret)
+    cc = cc[:, :, 0, :n]
+    if valid is not None:
+        cc = jnp.where(valid[None], cc, -jnp.inf)
+    return cc
+
+
 def topsis_closeness_kinds(mats_kinds: jax.Array, kind_idx: jax.Array,
                            weights: jax.Array, benefit: jax.Array, *,
                            valid: jax.Array | None = None,

@@ -112,6 +112,63 @@ def topsis_closeness_batched_blocks(xt: jax.Array, inv_norm: jax.Array,
     )(xt, inv_norm, w, a_pos, a_neg)
 
 
+def _topsis_grid_kernel(xt_ref, inv_norm_ref, w_ref, a_pos_ref, a_neg_ref,
+                        cc_ref):
+    """One (pod, node-block, scheme) grid cell of the weight-grid form:
+    xt (1, C_PAD, BLOCK_N) raw criteria for pod p — scheme-independent, so
+    its BlockSpec index map ignores the scheme coordinate and the pipeline
+    keeps the block resident across all S schemes; per-(scheme, pod) small
+    operands (1, 1, C_PAD, 1); out cc (1, 1, 1, BLOCK_N). Math is
+    :func:`_topsis_batched_kernel` with the scheme block-dim stripped."""
+    xt = xt_ref[...].astype(jnp.float32)
+    v = xt * inv_norm_ref[...] * w_ref[0]
+    dp = v - a_pos_ref[0]
+    dn = v - a_neg_ref[0]
+    d_pos = jnp.sqrt(jnp.sum(dp * dp, axis=1, keepdims=True))
+    d_neg = jnp.sqrt(jnp.sum(dn * dn, axis=1, keepdims=True))
+    denom = d_pos + d_neg
+    cc = d_neg / jnp.maximum(denom, _EPS)
+    cc_ref[...] = jnp.where(denom <= _EPS, 0.5, cc)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def topsis_closeness_grid_blocks(xt: jax.Array, inv_norm: jax.Array,
+                                 w: jax.Array, a_pos: jax.Array,
+                                 a_neg: jax.Array,
+                                 block_n: int = DEFAULT_BLOCK_N,
+                                 interpret: bool = False) -> jax.Array:
+    """Weight-scheme-grid scoring: xt (P, C_PAD, N_pad) raw criteria shared
+    by every scheme; per-pod inv_norm (P, C_PAD, 1); per-(scheme, pod)
+    w / a_pos / a_neg (S, P, C_PAD, 1). The grid is (pods, node blocks,
+    schemes) with the scheme axis INNERMOST (fastest-varying): Pallas only
+    re-fetches an operand block when its index-map output changes between
+    consecutive grid steps, and xt's map ignores the scheme coordinate — so
+    each (pod, node-block) criteria tile is pulled from HBM once and reused
+    across all S schemes, keeping criteria traffic at O(P*N) rather than
+    O(S*P*N). Schemes lead the OUTPUT layout instead: returns
+    (S, P, 1, N_pad) closeness, one contiguous (P, N) plane per scheme."""
+    p, c_pad, n_pad = xt.shape
+    s = w.shape[0]
+    assert c_pad == C_PAD and n_pad % block_n == 0, (xt.shape, block_n)
+    assert w.shape == a_pos.shape == a_neg.shape == (s, p, C_PAD, 1), (
+        w.shape, a_pos.shape, a_neg.shape)
+    grid = (p, n_pad // block_n, s)
+    small = pl.BlockSpec((1, 1, C_PAD, 1), lambda b, i, k: (k, b, 0, 0))
+    return pl.pallas_call(
+        _topsis_grid_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, C_PAD, block_n), lambda b, i, k: (b, 0, i)),
+            pl.BlockSpec((1, C_PAD, 1), lambda b, i, k: (b, 0, 0)),
+            small, small, small,
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, block_n),
+                               lambda b, i, k: (k, b, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((s, p, 1, n_pad), jnp.float32),
+        interpret=interpret,
+    )(xt, inv_norm, w, a_pos, a_neg)
+
+
 def _topsis_kinds_kernel(kind_ref, xt_ref, inv_norm_ref, w_ref, a_pos_ref,
                          a_neg_ref, cc_ref):
     """One (pod, node-block) grid cell of the kind-indexed form: the

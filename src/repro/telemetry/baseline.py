@@ -75,12 +75,20 @@ METRICS: dict[str, tuple[str, float]] = {
     "migrations": ("exact", EXACT_DEFAULT_REL),
     "sleeps": ("exact", EXACT_DEFAULT_REL),
     "wakes": ("exact", EXACT_DEFAULT_REL),
+    # BENCH_pareto.json — timings one-sided; frontier membership is
+    # backend-independent float64 arithmetic, gated exactly
+    "ms_fused": ("timing", TIMING_DEFAULT_REL),
+    "ms_serial": ("timing", TIMING_DEFAULT_REL),
+    "us_per_scheme_fused": ("timing", TIMING_DEFAULT_REL),
+    "frontier_size": ("exact", EXACT_DEFAULT_REL),
+    "frontier_checksum": ("exact", EXACT_DEFAULT_REL),
 }
 
 # per-cell annotations that are neither identity nor gated metrics
 IGNORED_KEYS = frozenset({
     "interpret_mode",              # provenance flag, consumed by gating
     "speedup_vs_rebuild",          # derived ratio of two timings
+    "speedup_fused_vs_serial",     # derived ratio of two timings
     "max_closeness_err_vs_numpy",  # pinned by its own sweep tolerance
 })
 

@@ -263,6 +263,133 @@ def _bar_chart(edges, counts) -> str:
     return "".join(parts)
 
 
+def _scatter_chart(xlabel: str, ylabel: str,
+                   points: list[tuple[float, float, str, bool]]) -> str:
+    """Inline-SVG scatter of one frontier: ``points`` is
+    ``(x, y, tooltip, is_dominant)``; the dominant pick renders in the
+    second categorical slot with a surface ring, everything else in the
+    first."""
+    W, H = 960, 230
+    ml, mr, mt, mb = 56, 12, 8, 34
+    pw, ph = W - ml - mr, H - mt - mb
+    xs = [p[0] for p in points]
+    ys = [p[1] for p in points]
+    x0, x1 = min(xs), max(xs)
+    y0, y1 = min(ys), max(ys)
+    if x1 <= x0:
+        x0, x1 = x0 - 1.0, x1 + 1.0
+    if y1 <= y0:
+        y0, y1 = y0 - 1.0, y1 + 1.0
+    xpad, ypad = 0.05 * (x1 - x0), 0.08 * (y1 - y0)
+    x0, x1 = x0 - xpad, x1 + xpad
+    y0, y1 = y0 - ypad, y1 + ypad
+
+    def x(v):
+        return ml + pw * (v - x0) / (x1 - x0)
+
+    def y(v):
+        return mt + ph * (1.0 - (v - y0) / (y1 - y0))
+
+    parts = [f'<svg viewBox="0 0 {W} {H}" width="100%" height="{H}" '
+             f'role="img" aria-label="{_esc(xlabel)} vs {_esc(ylabel)} '
+             f'frontier">']
+    for tv in _ticks(y0, y1):
+        yy = y(tv)
+        parts.append(f'<line x1="{ml}" y1="{yy:.1f}" x2="{W - mr}" '
+                     f'y2="{yy:.1f}" stroke="var(--gridline)" '
+                     f'stroke-width="1"/>')
+        parts.append(f'<text x="{ml - 6}" y="{yy + 3.5:.1f}" '
+                     f'text-anchor="end" font-size="11" '
+                     f'fill="var(--text-muted)">{_esc(_num(tv))}</text>')
+    parts.append(f'<line x1="{ml}" y1="{mt + ph}" x2="{W - mr}" '
+                 f'y2="{mt + ph}" stroke="var(--baseline)" '
+                 f'stroke-width="1"/>')
+    for tv in _ticks(x0, x1):
+        parts.append(f'<text x="{x(tv):.1f}" y="{H - 18}" '
+                     f'text-anchor="middle" font-size="11" '
+                     f'fill="var(--text-muted)">{_esc(_num(tv))}</text>')
+    parts.append(f'<text x="{ml + pw / 2:.1f}" y="{H - 4}" '
+                 f'text-anchor="middle" font-size="11" '
+                 f'fill="var(--text-secondary)">{_esc(xlabel)} &#8594; '
+                 f'(lower is better; y: {_esc(ylabel)})</text>')
+    # dominated-into-front ordering: plain points first, dominant on top
+    for px, py, tip, dom in sorted(points, key=lambda p: p[3]):
+        if dom:
+            parts.append(f'<circle cx="{x(px):.1f}" cy="{y(py):.1f}" '
+                         f'r="6" fill="{_slot(1)}" '
+                         f'stroke="var(--surface-1)" stroke-width="2">'
+                         f'<title>{_esc(tip)}</title></circle>')
+        else:
+            parts.append(f'<circle cx="{x(px):.1f}" cy="{y(py):.1f}" '
+                         f'r="3.5" fill="{_slot(0)}" fill-opacity="0.8">'
+                         f'<title>{_esc(tip)}</title></circle>')
+    parts.append("</svg>")
+    return "".join(parts)
+
+
+_FRONTIER_TABLE_CAP = 20      # frontier rows shown per regime table
+
+
+def _frontier_section(frontier: dict) -> list[str]:
+    """The Pareto-frontier cards: per regime, a scatter of the frontier
+    over the first two metric axes (dominant pick highlighted) and the
+    top frontier rows. ``frontier`` is
+    ``repro.core.pareto.FrontierAtlas.to_report()`` payload —
+    regime -> {metrics, n_schemes, n_front, dominant, front}."""
+    body: list[str] = []
+    body.append("<h2>Pareto frontier</h2>")
+    for regime, data in sorted(frontier.items()):
+        metrics = list(data.get("metrics") or [])
+        front = list(data.get("front") or [])
+        dom = data.get("dominant") or {}
+        body.append('<div class="card">')
+        body.append(f'<p class="chart-title">{_esc(regime)}</p>')
+        body.append(
+            f'<p class="sub">{_esc(data.get("n_front", len(front)))} '
+            f'Pareto-optimal of {_esc(data.get("n_schemes", "?"))} '
+            f'schemes &#183; dominant pick: scheme '
+            f'#{_esc(dom.get("index", "?"))}'
+            + (f' ({_esc(dom["name"])})' if dom.get("name") else "")
+            + "</p>")
+        if len(metrics) >= 2 and front:
+            mx, my = metrics[0], metrics[1]
+            pts = []
+            for p in front:
+                pm = p.get("metrics") or {}
+                tip = (f'#{p.get("index")} '
+                       + " ".join(f"{k}={_num(float(v))}"
+                                  for k, v in pm.items()))
+                pts.append((float(pm[mx]), float(pm[my]), tip,
+                            p.get("index") == dom.get("index")))
+            body.append(_scatter_chart(mx, my, pts))
+        if front:
+            body.append("<table>")
+            body.append("<tr><th>#</th><th>name</th><th>weights</th>"
+                        + "".join(f"<th>{_esc(m)}</th>" for m in metrics)
+                        + "</tr>")
+            for p in front[:_FRONTIER_TABLE_CAP]:
+                pm = p.get("metrics") or {}
+                w = ", ".join(_num(float(v))
+                              for v in (p.get("weights") or []))
+                mark = " &#9733;" if p.get("index") == dom.get("index") \
+                    else ""
+                body.append(
+                    f'<tr><td>{_esc(p.get("index"))}{mark}</td>'
+                    f'<td>{_esc(p.get("name") or "-")}</td>'
+                    f'<td>{_esc(w)}</td>'
+                    + "".join(f"<td>{_esc(_num(float(pm.get(m))))}</td>"
+                              if pm.get(m) is not None else "<td>-</td>"
+                              for m in metrics)
+                    + "</tr>")
+            body.append("</table>")
+            if len(front) > _FRONTIER_TABLE_CAP:
+                body.append(f'<p class="note">showing '
+                            f'{_FRONTIER_TABLE_CAP} of {len(front)} '
+                            f'frontier schemes</p>')
+        body.append("</div>")
+    return body
+
+
 def _series_groups(tel) -> dict[str, list]:
     groups: dict[str, list] = {}
     for s in tel.timeseries.values():
@@ -293,12 +420,15 @@ def _tiles(summary: dict) -> str:
 
 
 def html_report(tel=None, result=None, title: str = "GreenPod run report",
-                provenance: dict | None = None) -> str:
+                provenance: dict | None = None,
+                frontier: dict | None = None) -> str:
     """Render the run as one self-contained HTML document (returned as a
     string). ``tel`` supplies the recorded registry (series, histograms,
     counters, gauges); ``result`` supplies the summary tiles and TOPSIS
-    explanations. Either may be omitted; the corresponding sections
-    collapse to a note."""
+    explanations; ``frontier`` (a
+    ``repro.core.pareto.FrontierAtlas.to_report()`` payload) adds a
+    Pareto-frontier table + scatter section per regime. Any may be
+    omitted; the corresponding sections collapse to a note."""
     body: list[str] = []
     body.append(f"<h1>{_esc(title)}</h1>")
     if provenance:
@@ -313,6 +443,9 @@ def html_report(tel=None, result=None, title: str = "GreenPod run report",
     if result is not None:
         body.append("<h2>Run summary</h2>")
         body.append(_tiles(result.summary()))
+
+    if frontier:
+        body.extend(_frontier_section(frontier))
 
     body.append("<h2>Timelines</h2>")
     groups = _series_groups(tel) if tel is not None else {}
@@ -432,10 +565,11 @@ def html_report(tel=None, result=None, title: str = "GreenPod run report",
 
 def write_html_report(path, tel=None, result=None,
                       title: str = "GreenPod run report",
-                      provenance: dict | None = None) -> str:
+                      provenance: dict | None = None,
+                      frontier: dict | None = None) -> str:
     """Write :func:`html_report` to ``path``; returns the path."""
     doc = html_report(tel=tel, result=result, title=title,
-                      provenance=provenance)
+                      provenance=provenance, frontier=frontier)
     with open(path, "w") as f:
         f.write(doc)
     return str(path)
